@@ -1,0 +1,37 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import os
+import pickle
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+RESULTS = Path(__file__).parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+
+def load_tons(n: int):
+    """Load a synthesized TONS topology from benchmarks/results."""
+    from repro.core.topology import Pod, Topology
+    p = RESULTS / f"tons_{n}.pkl"
+    if not p.exists():
+        return None
+    d = pickle.load(open(p, "rb"))
+    spec = {128: (4, 4, 8), 192: (4, 4, 12), 256: (4, 8, 8),
+            384: (4, 8, 12), 512: (8, 8, 8)}[n]
+    topo = Topology(Pod(spec), [tuple(e) for e in d["optical"]],
+                    name=f"TONS_SYM {n}")
+    return topo, d
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def emit(name: str, us: float, derived):
+    print(f"{name},{us:.0f},{derived}")

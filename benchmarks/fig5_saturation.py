@@ -1,0 +1,57 @@
+"""Fig. 5: uniform-random saturation points, normalized to best PT+DOR."""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit, load_tons, timed
+
+
+def saturation(topo, mode: str, step=0.02, cycles=3000, warmup=1000,
+               seed=0):
+    from repro.core import netsim as NS, routing as R
+    if mode == "dor":
+        tab = NS.dor_tables(topo)          # 2 escape VCs (datelines)
+    else:
+        # Table 2: 4 VCs total; AT spreads turns over all of them
+        at = R.allowed_turns(topo, n_vc=4, priority="apl", robust=False,
+                             seed=seed)
+        routed = R.select_paths(at, K=4, local_search_rounds=3, seed=seed)
+        tab = NS.at_tables(topo, at, routed)
+    sat, _ = NS.saturation_point(tab, step=step, cycles=cycles,
+                                 warmup=warmup)
+    return sat
+
+
+def main(full: bool = False) -> None:
+    from repro.core import topology as T
+    spec = (4, 4, 8)
+    step = 0.04 if not full else 0.01
+    cyc = 2500 if not full else 6000
+
+    results = {}
+    pt = T.pt(spec)
+    results["PT+DOR"], us = timed(saturation, pt, "dor", step, cyc)
+    results["PT+AT"], _ = timed(saturation, pt, "at", step, cyc)
+    pdtt = T.pdtt(spec)
+    results["PDTT+AT"], _ = timed(saturation, pdtt, "at", step, cyc)
+    loaded = load_tons(128)
+    if loaded:
+        results["TONS+AT"], _ = timed(saturation, loaded[0], "at", step,
+                                      cyc)
+    base = results["PT+DOR"]
+    print("# saturation, normalized to PT+DOR (paper Fig. 5: TONS ~2x)")
+    for k, v in results.items():
+        print(f"  {k:10s}: sat={v:.4f}  norm={v / base:.2f}x")
+    if "TONS+AT" in results:
+        emit("fig5_tons_over_pt", us,
+             f"speedup={results['TONS+AT'] / base:.3f}x")
+    emit("fig5_at_over_dor", us,
+         f"speedup={results['PT+AT'] / base:.3f}x")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(ap.parse_args().full)

@@ -1,0 +1,67 @@
+"""Figs. 9-11: AT turn prioritization, VC load balance, DOR VC skew."""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit, load_tons, timed
+
+
+def main(full: bool = False) -> None:
+    from repro.core import netsim as NS, routing as R, topology as T
+    from repro.core.vcalloc import allocate_vcs
+
+    loaded = load_tons(128)
+    topo = loaded[0] if loaded else T.pdtt((4, 4, 8))
+    lb_hops = None
+    from repro.core.topology import bfs_all_pairs
+    d = bfs_all_pairs(topo)
+    lb_hops = d[np.isfinite(d)].sum() / (topo.n * (topo.n - 1))
+    lb_load = R.load_lower_bound(topo)
+
+    # Fig. 9: prioritization heuristics
+    results = {}
+    for mode in ("apl", "random"):
+        at = R.allowed_turns(topo, n_vc=2, priority=mode)
+        routed = R.select_paths(at, K=4, local_search_rounds=3)
+        results[mode] = (routed, at)
+        print(f"  {mode:6s}: Lmax/LB={routed.l_max / lb_load:.3f} "
+              f"hops/min={routed.avg_hops / lb_hops:.3f}")
+    # CPL: re-prioritize by the APL routing's chosen turn frequencies
+    freq = R.turn_frequencies(results["apl"][0].paths)
+    at_cpl = R.allowed_turns(topo, n_vc=2, chosen_loads=freq)
+    routed_cpl = R.select_paths(at_cpl, K=4, local_search_rounds=3)
+    print(f"  cpl   : Lmax/LB={routed_cpl.l_max / lb_load:.3f} "
+          f"hops/min={routed_cpl.avg_hops / lb_hops:.3f}")
+    emit("fig9_cpl_lmax_over_lb", 0,
+         f"{routed_cpl.l_max / lb_load:.3f}")
+
+    # Fig. 10: VC balance on TONS/AT
+    at, routed = results["apl"][1], results["apl"][0]
+    _, bal = allocate_vcs(at, routed.paths, balance=True)
+    _, unbal = allocate_vcs(at, routed.paths, balance=False)
+    print(f"  VC hops balanced={bal.tolist()} unbalanced={unbal.tolist()}")
+    emit("fig10_vc_balance", 0,
+         f"max/min={bal.max() / max(bal.min(), 1):.3f}")
+
+    # Fig. 11: DOR skew on the torus baseline
+    pt = T.pt((4, 4, 8))
+    _, dvc = NS.dor_paths(pt)
+    counts = np.zeros(2, np.int64)
+    for v in dvc.values():
+        for x in v:
+            counts[x] += 1
+    at_pt = R.allowed_turns(pt, n_vc=2, priority="apl")
+    routed_pt = R.select_paths(at_pt, K=4, local_search_rounds=2)
+    _, at_counts = allocate_vcs(at_pt, routed_pt.paths, balance=True)
+    print(f"  DOR hops/VC={counts.tolist()}  AT hops/VC="
+          f"{at_counts.tolist()}")
+    emit("fig11_dor_vc0_share", 0,
+         f"{counts[0] / counts.sum():.3f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(ap.parse_args().full)

@@ -1,0 +1,54 @@
+"""Benchmark suite entry point: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus human-readable detail).
+Quick settings by default; pass --full for the paper-scale sweeps.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_smallgraphs, fig2_progress,
+                            fig3_analytical, fig5_saturation,
+                            fig6_collectives, fig7_traces, fig8_faults,
+                            fig9_routing_ablation, roofline)
+    suites = [
+        ("fig1_smallgraphs", fig1_smallgraphs.main),
+        ("fig2_progress", fig2_progress.main),
+        ("fig3_analytical", fig3_analytical.main),
+        ("fig5_saturation", fig5_saturation.main),
+        ("fig6_collectives", fig6_collectives.main),
+        ("fig7_traces", fig7_traces.main),
+        ("fig8_faults", fig8_faults.main),
+        ("fig9_routing_ablation", fig9_routing_ablation.main),
+        ("roofline", roofline.main),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        print(f"## {name}")
+        t0 = time.time()
+        try:
+            fn(full=args.full)
+        except Exception as e:
+            print(f"{name},0,ERROR:{e}")
+            traceback.print_exc()
+        print(f"## {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

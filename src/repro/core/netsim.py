@@ -1,0 +1,286 @@
+"""Cycle-level network simulator, vectorised and jitted in JAX.
+
+Replaces CNSim (paper Section 6.1) for this container: synchronous
+packet-granularity wormhole approximation with per-(channel, VC) FIFOs,
+round-robin VC arbitration, one packet serviced per channel per cycle,
+static single-path routing tables and per-hop VC assignments from the AT
+pipeline. Uniform-random traffic swept over injection rates; saturation =
+largest rate whose delivered throughput tracks the offered rate (CNSim's
+first-timeout criterion, in deficit form).
+
+Defaults follow Table 2 where representable at packet granularity
+(radix 6, 2 escape VCs of the 4 total, buffering in packet slots).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.routing import ATResult, Channels, RoutingResult
+from repro.core.topology import Topology
+
+MAXHOP = 40
+
+
+@dataclasses.dataclass
+class SimTables:
+    """Dense static routing tables for the simulator."""
+    n: int
+    n_ch: int
+    n_vc: int
+    ch_dst: np.ndarray                  # (C,)
+    path: np.ndarray                    # (n, n, MAXHOP) channel ids, -1 pad
+    vcs: np.ndarray                     # (n, n, MAXHOP) vc ids
+    hops: np.ndarray                    # (n, n)
+
+
+def build_tables(topo: Topology, routed: RoutingResult,
+                 vc_seqs: Dict[Tuple[int, int], List[int]],
+                 n_vc: int = 2) -> SimTables:
+    ch = Channels.from_topology(topo)
+    n = topo.n
+    path = np.full((n, n, MAXHOP), -1, np.int32)
+    vcs = np.zeros((n, n, MAXHOP), np.int8)
+    hops = np.zeros((n, n), np.int32)
+    for (s, d), p in routed.paths.items():
+        L = min(len(p), MAXHOP)
+        path[s, d, :L] = p[:L]
+        vcs[s, d, :L] = vc_seqs[(s, d)][:L]
+        hops[s, d] = L
+    return SimTables(n, ch.n, n_vc, ch.dst.astype(np.int32), path, vcs,
+                     hops)
+
+
+@partial(jax.jit, static_argnames=("n", "n_ch", "n_vc", "slots", "cycles",
+                                   "flits"))
+def _simulate(ch_dst, path, vcs, rate, key, *, n, n_ch, n_vc, slots,
+              cycles, warmup, flits=1):
+    NQ = n_ch * n_vc
+
+    # queue state: per-(channel,vc) ring buffers of packet attributes
+    q_src = jnp.zeros((NQ, slots), jnp.int32)
+    q_dst = jnp.zeros((NQ, slots), jnp.int32)
+    q_hop = jnp.zeros((NQ, slots), jnp.int32)
+    head = jnp.zeros((NQ,), jnp.int32)
+    size = jnp.zeros((NQ,), jnp.int32)
+    rr = jnp.zeros((n_ch,), jnp.int32)
+    busy = jnp.zeros((n_ch,), jnp.int32)   # flit-serialisation countdown
+
+    def qid(c, v):
+        return c * n_vc + v
+
+    def cycle(i, carry):
+        (q_src, q_dst, q_hop, head, size, rr, busy, key, stats) = carry
+        offered, accepted, delivered = stats
+
+        # ---- head packet per (channel, vc) --------------------------------
+        hs = q_src[jnp.arange(NQ), head]
+        hd = q_dst[jnp.arange(NQ), head]
+        hh = q_hop[jnp.arange(NQ), head]
+        nonempty = size > 0
+
+        arrive_node = ch_dst[jnp.arange(NQ) // n_vc]
+        consume = nonempty & (arrive_node == hd)
+        nxt_c = path[hs, hd, hh + 1]
+        nxt_v = vcs[hs, hd, hh + 1].astype(jnp.int32)
+        tq = jnp.where(consume, -1, qid(nxt_c, nxt_v))
+        fwd_ok = nonempty & ~consume & (size[jnp.clip(tq, 0, NQ - 1)]
+                                        < slots)
+        eligible = consume | fwd_ok                     # per (c, v)
+
+        # ---- round-robin arbitration: one vc per channel ------------------
+        # multi-flit packets occupy the link for `flits` cycles
+        eligible = eligible & jnp.repeat(busy == 0, n_vc)
+        elig_cv = eligible.reshape(n_ch, n_vc)
+        offs = (rr[:, None] + jnp.arange(n_vc)[None, :]) % n_vc
+        pri = jnp.take_along_axis(elig_cv, offs, axis=1)
+        first = jnp.argmax(pri, axis=1)
+        any_e = pri.any(axis=1)
+        win_v = (rr + first) % n_vc
+        win_q = jnp.arange(n_ch) * n_vc + win_v          # (C,)
+        win_valid = any_e
+        rr = jnp.where(win_valid, (win_v + 1) % n_vc, rr)
+
+        w_src = hs[win_q]
+        w_dst = hd[win_q]
+        w_hop = hh[win_q]
+        w_consume = consume[win_q] & win_valid
+        w_target = jnp.where(win_valid & ~w_consume, tq[win_q], -1)
+
+        # ---- rank winners per target queue, check space -------------------
+        sort_i = jnp.argsort(jnp.where(w_target < 0, NQ + 1, w_target))
+        st = jnp.where(w_target < 0, NQ + 1, w_target)[sort_i]
+        newgrp = jnp.concatenate([jnp.ones(1, bool), st[1:] != st[:-1]])
+        gid = jnp.cumsum(newgrp) - 1
+        grp_start = jnp.where(newgrp, jnp.arange(n_ch), 0)
+        grp_start = jax.lax.associative_scan(jnp.maximum, grp_start)
+        rank_sorted = jnp.arange(n_ch) - grp_start
+        rank = jnp.zeros(n_ch, jnp.int32).at[sort_i].set(
+            rank_sorted.astype(jnp.int32))
+        space_ok = (size[jnp.clip(w_target, 0, NQ - 1)] + rank) < slots
+        w_push = win_valid & ~w_consume & (w_target >= 0) & space_ok
+        w_pop = w_consume | w_push
+        busy = jnp.where(w_pop, flits - 1, jnp.maximum(busy - 1, 0))
+
+        # ---- apply pops ----------------------------------------------------
+        popq = jnp.where(w_pop, win_q, NQ)  # NQ = dummy
+        head = head.at[jnp.clip(popq, 0, NQ - 1)].add(
+            jnp.where(w_pop, 1, 0)) % slots
+        size = size.at[jnp.clip(popq, 0, NQ - 1)].add(
+            jnp.where(w_pop, -1, 0))
+
+        # ---- apply pushes --------------------------------------------------
+        tgt = jnp.clip(w_target, 0, NQ - 1)
+        slot = (head[tgt] + size[tgt] + rank) % slots
+        q_src = q_src.at[tgt, slot].set(
+            jnp.where(w_push, w_src, q_src[tgt, slot]))
+        q_dst = q_dst.at[tgt, slot].set(
+            jnp.where(w_push, w_dst, q_dst[tgt, slot]))
+        q_hop = q_hop.at[tgt, slot].set(
+            jnp.where(w_push, w_hop + 1, q_hop[tgt, slot]))
+        size = size.at[tgt].add(jnp.where(w_push, 1, 0))
+
+        # ---- injection -----------------------------------------------------
+        key, k1, k2 = jax.random.split(key, 3)
+        want = jax.random.uniform(k1, (n,)) < rate
+        dsts = jax.random.randint(k2, (n,), 0, n - 1)
+        srcs = jnp.arange(n)
+        dsts = jnp.where(dsts >= srcs, dsts + 1, dsts)
+        c0 = path[srcs, dsts, 0]
+        v0 = vcs[srcs, dsts, 0].astype(jnp.int32)
+        iq = qid(c0, v0)
+        has_space = size[iq] < slots
+        inj = want & has_space
+        slot = (head[iq] + size[iq]) % slots
+        q_src = q_src.at[iq, slot].set(jnp.where(inj, srcs, q_src[iq, slot]))
+        q_dst = q_dst.at[iq, slot].set(jnp.where(inj, dsts, q_dst[iq, slot]))
+        q_hop = q_hop.at[iq, slot].set(jnp.where(inj, 0, q_hop[iq, slot]))
+        size = size.at[iq].add(jnp.where(inj, 1, 0))
+
+        measure = i >= warmup
+        offered = offered + jnp.where(measure, want.sum(), 0)
+        accepted = accepted + jnp.where(measure, inj.sum(), 0)
+        delivered = delivered + jnp.where(measure, w_consume.sum(), 0)
+        return (q_src, q_dst, q_hop, head, size, rr, busy, key,
+                (offered, accepted, delivered))
+
+    stats0 = (jnp.zeros((), jnp.int32),) * 3
+    carry = (q_src, q_dst, q_hop, head, size, rr, busy, key, stats0)
+    carry = jax.lax.fori_loop(0, cycles, cycle, carry)
+    offered, accepted, delivered = carry[-1]
+    return offered, accepted, delivered
+
+
+def run(tables: SimTables, rate: float, cycles: int = 6000,
+        warmup: int = 2000, slots: int = 128, seed: int = 0,
+        flits: int = 4):
+    # the simulator's integer carries are written for 32-bit mode; shield
+    # it from processes that enabled x64 (e.g. the LP solver)
+    with jax.experimental.disable_x64():
+        off, acc, dlv = _simulate(
+            jnp.asarray(tables.ch_dst), jnp.asarray(tables.path),
+            jnp.asarray(tables.vcs), jnp.float32(rate),
+            jax.random.PRNGKey(seed), n=tables.n, n_ch=tables.n_ch,
+            n_vc=tables.n_vc, slots=slots, cycles=cycles, warmup=warmup,
+            flits=flits)
+    meas = cycles - warmup
+    return {
+        "offered": float(off) / meas / tables.n,
+        "accepted": float(acc) / meas / tables.n,
+        "delivered": float(dlv) / meas / tables.n,
+    }
+
+
+def saturation_point(tables: SimTables, step: float = 0.01,
+                     max_rate: float = 1.0, deficit: float = 0.05,
+                     cycles: int = 6000, warmup: int = 2000,
+                     slots: int = 128, flits: int = 4
+                     ) -> Tuple[float, List[Dict]]:
+    """Sweep injection rate; saturation = last rate where delivered covers
+    (1 - deficit) of offered."""
+    trace = []
+    sat = 0.0
+    rate = step
+    while rate <= max_rate + 1e-9:
+        r = run(tables, rate, cycles=cycles, warmup=warmup, slots=slots,
+                flits=flits)
+        r["rate"] = rate
+        trace.append(r)
+        if r["delivered"] >= (1 - deficit) * r["offered"]:
+            sat = r["delivered"]
+        else:
+            break
+        rate += step
+    return sat, trace
+
+
+# ---------------------------------------------------------------------------
+# DOR baseline on prismatic tori (XYZ order, dateline VC switching)
+# ---------------------------------------------------------------------------
+
+
+def dor_paths(topo: Topology) -> Tuple[Dict, Dict]:
+    """Dimension-ordered minimal routing on a torus with dateline VC rule:
+    start on VC0, switch to VC1 after crossing a wrap link in any dim."""
+    from repro.core.topology import Pod
+    ch = Channels.from_topology(topo)
+    pod = topo.pod
+    X, Y, Z = pod.dims
+    dims = pod.dims
+    paths, vcseqs = {}, {}
+    for s in range(topo.n):
+        sc = list(pod.coords(s))
+        for d in range(topo.n):
+            if s == d:
+                continue
+            dc = list(pod.coords(d))
+            cur = list(sc)
+            seq, vseq = [], []
+            vc = 0
+            for axis in range(3):
+                delta = (dc[axis] - cur[axis]) % dims[axis]
+                if delta == 0:
+                    continue
+                step = 1 if delta <= dims[axis] - delta else -1
+                count = delta if step == 1 else dims[axis] - delta
+                for _ in range(count):
+                    nxt = list(cur)
+                    nxt[axis] = (cur[axis] + step) % dims[axis]
+                    u = pod.node_id(*cur)
+                    v = pod.node_id(*nxt)
+                    key = (u, v)
+                    if key not in ch.index:
+                        raise KeyError(f"DOR needs torus link {key}")
+                    seq.append(ch.index[key])
+                    if (step == 1 and nxt[axis] == 0) or \
+                       (step == -1 and cur[axis] == 0):
+                        vc = 1  # crossed the dateline
+                    vseq.append(vc)
+                    cur = nxt
+            paths[(s, d)] = tuple(seq)
+            vcseqs[(s, d)] = vseq
+    return paths, vcseqs
+
+
+def dor_tables(topo: Topology, n_vc: int = 2) -> SimTables:
+    paths, vcseqs = dor_paths(topo)
+    loads = np.zeros(2 * len(topo.edges()))
+    for p in paths.values():
+        loads[list(p)] += 1
+    routed = RoutingResult(paths, loads, float(loads.max()),
+                           float(np.mean([len(p) for p in paths.values()])),
+                           0)
+    return build_tables(topo, routed, vcseqs, n_vc=n_vc)
+
+
+def at_tables(topo: Topology, at: ATResult, routed: RoutingResult,
+              balance: bool = True) -> SimTables:
+    from repro.core.vcalloc import allocate_vcs
+    vcs, _ = allocate_vcs(at, routed.paths, balance=balance)
+    return build_tables(topo, routed, vcs, n_vc=at.n_vc)

@@ -1,0 +1,509 @@
+"""Deadlock-free routing: allowed turns (AT) on the VC-labeled CDG,
+candidate-path enumeration, and min-max-channel-load path selection.
+
+Paper Section 5 / Algorithms 1-2. Deadlock freedom is decoupled from route
+selection: a greedy allowed-turn construction keeps the channel dependency
+graph acyclic (incremental cycle detection); all shortest deadlock-free
+paths are enumerated per pair; a min-max load optimisation then picks one
+static path per (src, dst). Turn prioritisation: APL / CPL / Random.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.topology import Topology
+
+
+# ---------------------------------------------------------------------------
+# Channels
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Channels:
+    """Directed channels of an undirected topology."""
+    src: np.ndarray           # (C,)
+    dst: np.ndarray           # (C,)
+    color: np.ndarray         # OCS color or -1 (electrical)
+    index: Dict[Tuple[int, int], int]
+
+    @staticmethod
+    def from_topology(topo: Topology) -> "Channels":
+        e = topo.edges()
+        col = topo.edge_colors()
+        src = np.concatenate([e[:, 0], e[:, 1]])
+        dst = np.concatenate([e[:, 1], e[:, 0]])
+        color = np.concatenate([col, col])
+        index = {(int(s), int(d)): i for i, (s, d) in
+                 enumerate(zip(src, dst))}
+        return Channels(src.astype(np.int32), dst.astype(np.int32),
+                        color.astype(np.int32), index)
+
+    @property
+    def n(self) -> int:
+        return len(self.src)
+
+    def out_of(self, node: int) -> List[int]:
+        return [self.index[(node, d)] for d in
+                self.dst[self.src == node].tolist()]
+
+
+# ---------------------------------------------------------------------------
+# Incremental cycle detection (Pearce-Kelly) on the VC-labeled CDG
+# ---------------------------------------------------------------------------
+
+
+class IncrementalDAG:
+    """Maintains a topological order under edge insertions; insertions that
+    would create a cycle are rejected."""
+
+    def __init__(self, n_nodes: int):
+        self.n = n_nodes
+        self.order = np.arange(n_nodes, dtype=np.int64)
+        self.pos = np.arange(n_nodes, dtype=np.int64)
+        self.adj: List[List[int]] = [[] for _ in range(n_nodes)]
+        self.radj: List[List[int]] = [[] for _ in range(n_nodes)]
+
+    def try_add(self, u: int, v: int) -> bool:
+        if u == v:
+            return False
+        lb, ub = self.pos[v], self.pos[u]
+        if lb > ub:                 # already consistent
+            self.adj[u].append(v)
+            self.radj[v].append(u)
+            return True
+        # discover affected region
+        visited_f: List[int] = []
+        seen_f = {v}
+        stack = [v]
+        ok = True
+        while stack:
+            x = stack.pop()
+            visited_f.append(x)
+            for y in self.adj[x]:
+                if y == u:
+                    ok = False
+                    stack = []
+                    break
+                if self.pos[y] <= ub and y not in seen_f:
+                    seen_f.add(y)
+                    stack.append(y)
+        if not ok:
+            return False
+        visited_b: List[int] = []
+        seen_b = {u}
+        stack = [u]
+        while stack:
+            x = stack.pop()
+            visited_b.append(x)
+            for y in self.radj[x]:
+                if self.pos[y] >= lb and y not in seen_b:
+                    seen_b.add(y)
+                    stack.append(y)
+        # reorder: backward region then forward region into the merged slots
+        region = sorted(visited_b, key=lambda x: self.pos[x]) + \
+            sorted(visited_f, key=lambda x: self.pos[x])
+        slots = np.sort(self.pos[np.array(region)])
+        for node, slot in zip(region, slots):
+            self.pos[node] = slot
+            self.order[slot] = node
+        self.adj[u].append(v)
+        self.radj[v].append(u)
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Allowed-turn construction (Algorithms 1 & 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ATResult:
+    channels: Channels
+    n_vc: int
+    allowed: set                       # ((c_in, v0), (c_out, v1))
+    allowed_by_in: Dict[Tuple[int, int], List[Tuple[int, int]]]
+    trees: List[List[int]]             # robust spanning trees (channel lists)
+
+    def is_allowed(self, cin, v0, cout, v1) -> bool:
+        return ((cin, v0), (cout, v1)) in self.allowed
+
+
+def _state(c: int, v: int, n_vc: int) -> int:
+    return c * n_vc + v
+
+
+def spanning_tree_channels(topo: Topology, ch: Channels, root: int,
+                           forbidden_colors: Optional[set] = None,
+                           rng=None) -> Tuple[List[int], set]:
+    """BFS tree; returns both directions of each tree edge + used colors."""
+    adj = topo.adjacency()
+    n = topo.n
+    seen = np.zeros(n, bool)
+    seen[root] = True
+    q = deque([root])
+    chans: List[int] = []
+    used_colors: set = set()
+    forbidden = forbidden_colors or set()
+    while q:
+        u = q.popleft()
+        nbrs = list(adj[u])
+        if rng is not None:
+            rng.shuffle(nbrs)
+        for v in nbrs:
+            if seen[v]:
+                continue
+            c = ch.index[(u, v)]
+            col = int(ch.color[c])
+            if col >= 0 and col in forbidden:
+                continue
+            seen[v] = True
+            used_colors.add(col) if col >= 0 else None
+            chans.append(c)
+            chans.append(ch.index[(v, u)])
+            q.append(v)
+    if not seen.all():
+        return [], used_colors
+    return chans, used_colors
+
+
+def ocs_disjoint_spanning_trees(topo: Topology, ch: Channels
+                                ) -> Optional[Tuple[List[int], List[int]]]:
+    """Two spanning trees using disjoint OCS color sets (electrical edges
+    may be shared -- they cannot fault). Concurrent BFS from hop-distance
+    antipodes (paper 5.2)."""
+    from repro.core.topology import bfs_all_pairs
+    d = bfs_all_pairs(topo, sources=np.array([0]))[0]
+    far = int(np.argmax(d))
+    t0, colors0 = spanning_tree_channels(topo, ch, 0)
+    if not t0:
+        return None
+    t1, colors1 = spanning_tree_channels(topo, ch, far,
+                                         forbidden_colors=colors0)
+    if not t1:
+        # retry with a few random tie-breaks
+        rng = np.random.default_rng(0)
+        for _ in range(8):
+            t0, colors0 = spanning_tree_channels(topo, ch, 0, rng=rng)
+            t1, colors1 = spanning_tree_channels(
+                topo, ch, far, forbidden_colors=colors0, rng=rng)
+            if t1:
+                break
+    if not t1:
+        return None
+    return t0, t1
+
+
+def _tree_turns(chans: List[int], ch: Channels) -> List[Tuple[int, int]]:
+    """All non-reversing turns among a tree's channels (acyclic together)."""
+    inset = set(chans)
+    by_node = defaultdict(list)
+    for c in chans:
+        by_node[int(ch.dst[c])].append(c)
+    out_by_node = defaultdict(list)
+    for c in chans:
+        out_by_node[int(ch.src[c])].append(c)
+    turns = []
+    for mid, ins in by_node.items():
+        for cin in ins:
+            for cout in out_by_node.get(mid, []):
+                if ch.dst[cout] != ch.src[cin]:      # no u-turn
+                    turns.append((cin, cout))
+    return turns
+
+
+def base_turns(ch: Channels) -> List[Tuple[int, int]]:
+    out_by_node = defaultdict(list)
+    for c in range(ch.n):
+        out_by_node[int(ch.src[c])].append(c)
+    turns = []
+    for cin in range(ch.n):
+        mid = int(ch.dst[cin])
+        for cout in out_by_node[mid]:
+            if int(ch.dst[cout]) != int(ch.src[cin]):
+                turns.append((cin, cout))
+    return turns
+
+
+def prioritize_turns(turns, mode: str, topo: Topology, ch: Channels,
+                     seed: int = 0, sym_perms: Optional[np.ndarray] = None):
+    """APL: by frequency over all-shortest-path sets; CPL needs a chosen
+    routing (caller re-invokes); Random: shuffled."""
+    rng = np.random.default_rng(seed)
+    if mode == "random":
+        turns = list(turns)
+        rng.shuffle(turns)
+        return turns
+    # count turn frequency across all shortest paths (APL) via BFS DAGs
+    n = topo.n
+    adj = topo.adjacency()
+    freq = defaultdict(float)
+    for s in range(n):
+        dist = np.full(n, -1)
+        dist[s] = 0
+        q = deque([s])
+        parents = defaultdict(list)
+        while q:
+            u = q.popleft()
+            for v in adj[u]:
+                if dist[v] < 0:
+                    dist[v] = dist[u] + 1
+                    q.append(v)
+                if dist[v] == dist[u] + 1:
+                    parents[v].append(u)
+        # count path multiplicities through each turn
+        npaths = np.zeros(n)
+        npaths[s] = 1
+        for u in np.argsort(dist):
+            if dist[u] <= 0:
+                continue
+            for p in parents[u]:
+                npaths[u] += npaths[p]
+        for v in range(n):
+            for p in parents[v]:
+                for gp in parents[p]:
+                    cin = ch.index[(gp, p)]
+                    cout = ch.index[(p, v)]
+                    freq[(cin, cout)] += npaths[gp]
+    turns = sorted(turns, key=lambda t: -freq.get(t, 0.0))
+    return turns
+
+
+def allowed_turns(topo: Topology, n_vc: int = 2, priority: str = "apl",
+                  robust: bool = False, seed: int = 0,
+                  chosen_loads: Optional[Dict[Tuple[int, int], float]] = None
+                  ) -> ATResult:
+    """Algorithm 1. ``chosen_loads`` (turn -> frequency in a chosen routing)
+    enables the CPL variant on a second invocation."""
+    ch = Channels.from_topology(topo)
+    n_states = ch.n * n_vc
+    dag = IncrementalDAG(n_states)
+    allowed: set = set()
+    trees: List[List[int]] = []
+
+    def add_turn(cin, v0, cout, v1) -> bool:
+        key = ((cin, v0), (cout, v1))
+        if key in allowed:
+            return True
+        if dag.try_add(_state(cin, v0, n_vc), _state(cout, v1, n_vc)):
+            allowed.add(key)
+            return True
+        return False
+
+    if robust:
+        pair = ocs_disjoint_spanning_trees(topo, ch)
+        if pair is not None:
+            for vc, tree in zip((0, min(1, n_vc - 1)), pair):
+                trees.append(tree)
+                for (cin, cout) in _tree_turns(tree, ch):
+                    add_turn(cin, vc, cout, vc)
+
+    # routability seed: spanning tree on VC0 (Alg. 1 lines 9-10)
+    t0, _ = spanning_tree_channels(topo, ch, 0)
+    for (cin, cout) in _tree_turns(t0, ch):
+        add_turn(cin, 0, cout, 0)
+
+    turns = base_turns(ch)
+    if chosen_loads is not None:
+        turns = sorted(turns, key=lambda t: -chosen_loads.get(t, 0.0))
+    else:
+        turns = prioritize_turns(turns, priority, topo, ch, seed=seed)
+
+    vc_orders = [(v, v) for v in range(n_vc)] + \
+        [(v0, v1) for v0 in range(n_vc) for v1 in range(n_vc) if v0 != v1]
+    # first pass: at most one VC-labeled instance per base turn
+    for (cin, cout) in turns:
+        for (v0, v1) in vc_orders:
+            if add_turn(cin, v0, cout, v1):
+                break
+    # second pass: all admissible VC assignments
+    for (cin, cout) in turns:
+        for (v0, v1) in vc_orders:
+            add_turn(cin, v0, cout, v1)
+
+    by_in: Dict[Tuple[int, int], List[Tuple[int, int]]] = defaultdict(list)
+    for (a, b) in allowed:
+        by_in[a].append(b)
+    return ATResult(ch, n_vc, allowed, dict(by_in), trees)
+
+
+# ---------------------------------------------------------------------------
+# Deadlock-free path enumeration + selection
+# ---------------------------------------------------------------------------
+
+
+def shortest_path_states(at: ATResult, source: int,
+                         dead_channels: Optional[set] = None):
+    """BFS over (channel, vc) states from `source`; returns dist + parents
+    per state and best distance per destination node."""
+    ch = at.channels
+    n_vc = at.n_vc
+    dead = dead_channels or set()
+    dist: Dict[Tuple[int, int], int] = {}
+    parents: Dict[Tuple[int, int], List[Tuple[int, int]]] = defaultdict(list)
+    q = deque()
+    for c in at.channels.out_of(source):
+        if c in dead:
+            continue
+        for v in range(n_vc):
+            st = (c, v)
+            if st not in dist:
+                dist[st] = 1
+                q.append(st)
+    while q:
+        st = q.popleft()
+        c, v = st
+        for (c2, v2) in at.allowed_by_in.get(st, []):
+            if c2 in dead:
+                continue
+            st2 = (c2, v2)
+            if st2 not in dist:
+                dist[st2] = dist[st] + 1
+                parents[st2].append(st)
+                q.append(st2)
+            elif dist[st2] == dist[st] + 1:
+                parents[st2].append(st)
+    return dist, parents
+
+
+def candidate_paths(at: ATResult, source: int, K: int = 8,
+                    dead_channels: Optional[set] = None
+                    ) -> Dict[int, List[Tuple[int, ...]]]:
+    """Up to K shortest deadlock-free channel-paths per destination."""
+    ch = at.channels
+    dist, parents = shortest_path_states(at, source, dead_channels)
+    best: Dict[int, int] = {}
+    endstates: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
+    for (c, v), d in dist.items():
+        node = int(ch.dst[c])
+        if node == source:
+            continue
+        if node not in best or d < best[node]:
+            best[node] = d
+            endstates[node] = [(c, v)]
+        elif d == best[node]:
+            endstates[node].append((c, v))
+    out: Dict[int, List[Tuple[int, ...]]] = {}
+    for dest, sts in endstates.items():
+        paths = []
+        seen = set()
+        stack = [(st, (st[0],)) for st in sts]
+        while stack and len(paths) < K * 3:
+            st, suffix = stack.pop()
+            if dist[st] == 1:
+                if suffix not in seen:
+                    seen.add(suffix)
+                    paths.append(suffix)
+                continue
+            for p in parents[st]:
+                stack.append((p, (p[0],) + suffix))
+        uniq = []
+        useen = set()
+        for p in paths:
+            if p not in useen:
+                useen.add(p)
+                uniq.append(p)
+            if len(uniq) >= K:
+                break
+        out[dest] = uniq
+    return out
+
+
+@dataclasses.dataclass
+class RoutingResult:
+    paths: Dict[Tuple[int, int], Tuple[int, ...]]   # (s, d) -> channel seq
+    loads: np.ndarray                               # per-channel load
+    l_max: float
+    avg_hops: float
+    unreachable: int
+
+
+def select_paths(at: ATResult, K: int = 8, seed: int = 0,
+                 dead_channels: Optional[set] = None,
+                 local_search_rounds: int = 3) -> RoutingResult:
+    """Min-max channel load selection: greedy + local search (the paper
+    solves an ILP with Gurobi; we report the achieved L_max against the
+    lower bound so the optimality gap is visible)."""
+    ch = at.channels
+    n = int(max(ch.src.max(), ch.dst.max())) + 1
+    cands: Dict[Tuple[int, int], List[Tuple[int, ...]]] = {}
+    unreachable = 0
+    for s in range(n):
+        per_dest = candidate_paths(at, s, K=K, dead_channels=dead_channels)
+        for d in range(n):
+            if d == s:
+                continue
+            if d in per_dest:
+                cands[(s, d)] = per_dest[d]
+            else:
+                unreachable += 1
+
+    loads = np.zeros(ch.n)
+    chosen: Dict[Tuple[int, int], int] = {}
+    rng = np.random.default_rng(seed)
+    order = list(cands.keys())
+    rng.shuffle(order)
+
+    def path_cost(p):
+        lmax = max(loads[list(p)]) if p else 0
+        return (lmax, loads[list(p)].sum())
+
+    for sd in order:
+        best_i, best_cost = 0, None
+        for i, p in enumerate(cands[sd]):
+            cst = path_cost(p)
+            if best_cost is None or cst < best_cost:
+                best_i, best_cost = i, cst
+        chosen[sd] = best_i
+        loads[list(cands[sd][best_i])] += 1
+
+    for _ in range(local_search_rounds):
+        improved = False
+        hot = int(np.argmax(loads))
+        hot_flows = [sd for sd, i in chosen.items()
+                     if hot in cands[sd][i]]
+        rng.shuffle(hot_flows)
+        for sd in hot_flows:
+            cur = cands[sd][chosen[sd]]
+            loads[list(cur)] -= 1
+            best_i, best_cost = chosen[sd], path_cost(cur)
+            for i, p in enumerate(cands[sd]):
+                cst = path_cost(p)
+                if cst < best_cost:
+                    best_i, best_cost = i, cst
+            if best_i != chosen[sd]:
+                improved = True
+            chosen[sd] = best_i
+            loads[list(cands[sd][best_i])] += 1
+            new_hot = int(np.argmax(loads))
+            if loads[new_hot] < loads[hot]:
+                break
+        if not improved:
+            break
+
+    paths = {sd: cands[sd][i] for sd, i in chosen.items()}
+    hops = np.mean([len(p) for p in paths.values()]) if paths else 0.0
+    return RoutingResult(paths, loads, float(loads.max()), float(hops),
+                         unreachable)
+
+
+def load_lower_bound(topo: Topology) -> float:
+    """L_max >= total shortest-path channel-visits / #channels."""
+    from repro.core.topology import bfs_all_pairs
+    d = bfs_all_pairs(topo)
+    total = d[np.isfinite(d)].sum()
+    return total / (2 * len(topo.edges()))
+
+
+def turn_frequencies(paths: Dict[Tuple[int, int], Tuple[int, ...]]
+                     ) -> Dict[Tuple[int, int], float]:
+    """Turn usage of a chosen routing (for the CPL prioritisation)."""
+    freq: Dict[Tuple[int, int], float] = defaultdict(float)
+    for p in paths.values():
+        for a, b in zip(p[:-1], p[1:]):
+            freq[(a, b)] += 1.0
+    return dict(freq)

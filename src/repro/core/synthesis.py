@@ -1,0 +1,321 @@
+"""TONS topology synthesis: the dualized LR LP with edge variables.
+
+Implements Table 1 of the paper over *our* (validated) MCF conventions:
+
+  primal (P):  min  sum_p m_p d_p
+               s.t. sum_{unordered pairs p} d_p >= 1            [lambda]
+                    d_ij - d_ik - d_kj <= 0,
+                        ordered triples, (i,k) in L_valid       [y_ijk]
+                    d >= 0
+  dual (TONS): max lambda
+               s.t. for every unordered pair {a,b}:
+                    lambda - sum_{k in Lv(a)} y[a,b,k]
+                           - sum_{k in Lv(b)} y[b,a,k]
+                           + [ (a,b) in Lv ] ( sum_j y[a,j,b]
+                                             + sum_j y[b,j,a] )
+                           + sum_{i in Lv(a)} y[i,b,a]
+                           + sum_{i in Lv(b)} y[i,a,b]
+                           <= m_ab
+               lambda, y >= 0;  m in [0,1] constrained by C3 (one circuit
+               per OCS port) with electrical m fixed to 1.
+
+Scaling reductions: one-leg (y only for (i,k) in L_valid), edge/vertex
+symmetry (cube translations collapse y to canonical sources and m to edge
+orbits; constraints only for canonical pair classes), and Algorithm 3's
+iterative LP relaxation with greedy integer fixing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import topology as T
+from repro.core.lp import COOMatrix, solve, solve_highs, solve_pdhg
+from repro.core.mcf import PairCanon
+
+
+@dataclasses.dataclass
+class SynthesisLP:
+    pod: T.Pod
+    pc: PairCanon
+    n_var: int
+    c: np.ndarray
+    A: COOMatrix
+    b: np.ndarray
+    lo: np.ndarray
+    hi: np.ndarray
+    m_slice: slice                      # m variables within x
+    orbit_keys: List[int]               # orbit key per m var
+    orbit_members: List[List[Tuple[int, int, int]]]   # (u, v, color)
+    port_of: Dict[Tuple[int, int], int]  # (chip, axis) -> port row id
+
+
+def _neighbors(pod: T.Pod, candidates):
+    """L_valid adjacency: electrical + all candidate optical partners."""
+    n = pod.n
+    adj = [set() for _ in range(n)]
+    for u, v in T.electrical_edges(pod):
+        adj[int(u)].add(int(v))
+        adj[int(v)].add(int(u))
+    for u, v, _ in candidates:
+        adj[u].add(v)
+        adj[v].add(u)
+    return [sorted(s) for s in adj]
+
+
+def build_synthesis_lp(pod: T.Pod, symmetric: bool = True,
+                       fault_f: Optional[int] = None,
+                       pair_weight=None) -> SynthesisLP:
+    n = pod.n
+    perms = T.cube_translations(pod) if symmetric else \
+        np.arange(n, dtype=np.int32)[None, :]
+    pc = PairCanon(perms, n, directed=False)
+    P = pc.perms
+    g_of = pc.node_g
+
+    candidates = T.valid_optical_pairs(pod)
+    elec = {tuple(sorted(e)) for e in T.electrical_edges(pod).tolist()}
+    cand_set = {(u, v): c for u, v, c in candidates}
+    Lv = _neighbors(pod, candidates)
+
+    # ---- m variables: orbits of candidate edges --------------------------
+    cu = np.array([u for u, v, _ in candidates])
+    cv = np.array([v for u, v, _ in candidates])
+    ckeys = pc.key(cu, cv)
+    orbit_map: Dict[int, int] = {}
+    orbit_keys: List[int] = []
+    orbit_members: List[List[Tuple[int, int, int]]] = []
+    for (u, v, col), k in zip(candidates, ckeys.tolist()):
+        if k not in orbit_map:
+            orbit_map[k] = len(orbit_keys)
+            orbit_keys.append(k)
+            orbit_members.append([])
+        orbit_members[orbit_map[k]].append((u, v, col))
+    n_m = len(orbit_keys)
+
+    # ---- y variables ------------------------------------------------------
+    S = pc.sources.tolist()
+    y_idx: Dict[Tuple[int, int, int], int] = {}
+    for s in S:
+        for k in Lv[s]:
+            for j in range(n):
+                if j != s and j != k:
+                    y_idx[(s, j, k)] = len(y_idx)
+    n_y = len(y_idx)
+
+    # layout: [lambda | m (n_m) | y (n_y)]
+    n_var = 1 + n_m + n_y
+    m_off, y_off = 1, 1 + n_m
+
+    def yv(i, j, k):
+        """canonicalised y variable id for ordered triple (i, j, k)."""
+        g = g_of[i]
+        return y_off + y_idx[(int(P[g, i]), int(P[g, j]), int(P[g, k]))]
+
+    rows: List[np.ndarray] = []
+    cols: List[np.ndarray] = []
+    vals: List[np.ndarray] = []
+    b: List[float] = []
+    r = 0
+
+    def add(rr, cc, vv):
+        rows.append(np.asarray(rr, np.int64))
+        cols.append(np.asarray(cc, np.int64))
+        vals.append(np.asarray(vv, np.float64))
+
+    # ---- C4 rows: one per canonical unordered pair class ------------------
+    seen_pairs = set()
+    for a in S:
+        for bb in range(n):
+            if bb == a:
+                continue
+            key = pc.key(np.array([a]), np.array([bb]))[0]
+            if key in seen_pairs:
+                continue
+            seen_pairs.add(key)
+            rc, cc, vv = [], [], []
+            cc.append(0)
+            # +w_ab * lambda (w == 1 for uniform all-to-all demand)
+            wab = 1.0 if pair_weight is None else float(
+                pair_weight(np.array([a]), np.array([bb]))[0])
+            if wab <= 0.0:
+                wab = 0.0
+            vv.append(wab)
+            for (x0, x1) in ((a, bb), (bb, a)):
+                for k in Lv[x0]:
+                    if k != x1:
+                        cc.append(yv(x0, x1, k))
+                        vv.append(-1.0)
+            in_lv = bb in Lv[a]
+            if in_lv:
+                for (x0, x1) in ((a, bb), (bb, a)):
+                    for j in range(n):
+                        if j != a and j != bb:
+                            cc.append(yv(x0, j, x1))
+                            vv.append(1.0)
+            for (x0, x1) in ((a, bb), (bb, a)):
+                # + sum_{i in Lv(x1)} y[i, x0, x1]
+                for i in Lv[x1]:
+                    if i != x0:
+                        cc.append(yv(i, x0, x1))
+                        vv.append(1.0)
+            u, v = min(a, bb), max(a, bb)
+            rhs = 0.0
+            if (u, v) in elec:
+                rhs = 1.0
+            elif (u, v) in cand_set:
+                cc.append(m_off + orbit_map[int(key)] if in_lv else
+                          m_off + orbit_map[int(pc.key(np.array([u]),
+                                                       np.array([v]))[0])])
+                vv.append(-1.0)
+            add([r] * len(cc), cc, vv)
+            b.append(rhs)
+            r += 1
+
+    # ---- C3: one circuit per canonical port (equality as two ineqs) ------
+    port_rows: Dict[Tuple[int, int], List[int]] = defaultdict(list)
+    canon_chips = set(S)
+    port_of: Dict[Tuple[int, int], int] = {}
+    for oi, members in enumerate(orbit_members):
+        for (u, v, col) in members:
+            axis = col // T.N_POS
+            for chip in (u, v):
+                if chip in canon_chips:
+                    port_rows[(chip, axis)].append(oi)
+    for pid, ((chip, axis), olist) in enumerate(sorted(port_rows.items())):
+        port_of[(chip, axis)] = pid
+        ouniq, ocnt = np.unique(olist, return_counts=True)
+        add([r] * len(ouniq), m_off + ouniq, ocnt.astype(np.float64))
+        b.append(1.0)
+        r += 1
+        add([r] * len(ouniq), m_off + ouniq, -ocnt.astype(np.float64))
+        b.append(-1.0)
+        r += 1
+
+    # ---- C8: fault tolerance lambda >= (f+1)/(32 n) -----------------------
+    if fault_f is not None:
+        add([r], [0], [-1.0])
+        b.append(-(fault_f + 1) / (32.0 * n))
+        r += 1
+
+    A = COOMatrix.from_triplets(np.concatenate(rows), np.concatenate(cols),
+                                np.concatenate(vals), (r, n_var))
+    c = np.zeros(n_var)
+    c[0] = -1.0  # max lambda
+    lo = np.zeros(n_var)
+    hi = np.ones(n_var)
+    hi[0] = 1.0
+    return SynthesisLP(pod, pc, n_var, c, A, np.asarray(b), lo, hi,
+                       slice(m_off, m_off + n_m), orbit_keys, orbit_members,
+                       port_of)
+
+
+def _orbit_ports(members) -> List[Tuple[int, int]]:
+    out = []
+    for (u, v, col) in members:
+        axis = col // T.N_POS
+        out.append((u, axis))
+        out.append((v, axis))
+    return out
+
+
+@dataclasses.dataclass
+class SynthesisResult:
+    topology: T.Topology
+    lambdas: List[float]          # LP objective per greedy iterate
+    times: List[float]
+    status: str
+
+
+def synthesize(podspec: Tuple[int, int, int], symmetric: bool = True,
+               interval: int = 1, fault_f: Optional[int] = None,
+               prefer: str = "auto", verbose: bool = False,
+               max_lp_iters: int = 12000, tol: float = 2e-4,
+               pair_weight=None) -> SynthesisResult:
+    """Algorithm 3: iterative relaxed LP + greedy integral fixing."""
+    pod = T.Pod(podspec)
+    lp = build_synthesis_lp(pod, symmetric=symmetric, fault_f=fault_f,
+                            pair_weight=pair_weight)
+    lo, hi = lp.lo.copy(), lp.hi.copy()
+    n_m = lp.m_slice.stop - lp.m_slice.start
+
+    used_ports = set()
+    fixed = np.zeros(n_m, bool)
+    blocked = np.zeros(n_m, bool)
+    lambdas: List[float] = []
+    times: List[float] = []
+    t0 = time.time()
+    x_prev = y_prev = None
+
+    def feasible(oi):
+        if fixed[oi] or blocked[oi]:
+            return False
+        return all(p not in used_ports for p in
+                   _orbit_ports(lp.orbit_members[oi]))
+
+    def fix(oi):
+        fixed[oi] = True
+        lo[lp.m_slice][oi] = hi[lp.m_slice][oi] = 1.0
+        for p in _orbit_ports(lp.orbit_members[oi]):
+            used_ports.add(p)
+        for oj in range(n_m):
+            if not fixed[oj] and not blocked[oj] and not feasible(oj):
+                blocked[oj] = True
+                hi[lp.m_slice][oj] = 0.0
+
+    status = "ok"
+    while True:
+        remaining = [oi for oi in range(n_m) if feasible(oi)]
+        if not remaining:
+            break
+        use_ipm = prefer in ("highs", "ipm") or \
+            (prefer == "auto" and lp.n_var < 2_000_000)
+        if use_ipm:
+            # interior point (the paper found IPM fastest too, Section 2.3)
+            res = solve_highs(lp.c, lp.A, lp.b, lo, hi, method="highs-ipm")
+        else:
+            res = solve_pdhg(lp.c, lp.A, lp.b, lo, hi,
+                             max_iters=max_lp_iters, tol=tol,
+                             x0=x_prev, y0=y_prev, verbose=False)
+            x_prev, y_prev = res.x, res.y
+        lam = -res.obj
+        lambdas.append(lam)
+        times.append(time.time() - t0)
+        if verbose:
+            print(f"  synth it={len(lambdas)} lambda={lam:.6f} "
+                  f"fixed={int(fixed.sum())}/{n_m} ({res.status})")
+        if res.status not in ("optimal", "max_iters"):
+            status = res.status
+            # fall back to arbitrary feasible completion
+            for oi in remaining:
+                if feasible(oi):
+                    fix(oi)
+            break
+        mv = res.x[lp.m_slice].copy()
+        mv[~np.array([feasible(oi) for oi in range(n_m)])] = -np.inf
+        order = np.argsort(-mv)
+        picked = 0
+        for oi in order:
+            if picked >= interval:
+                break
+            if feasible(int(oi)) and mv[int(oi)] > -np.inf:
+                fix(int(oi))
+                picked += 1
+        if picked == 0:
+            for oi in remaining:
+                if feasible(oi):
+                    fix(oi)
+                    break
+
+    optical = []
+    for oi in range(n_m):
+        if fixed[oi]:
+            optical.extend(lp.orbit_members[oi])
+    optical = sorted(set(optical))
+    topo = T.Topology(pod, optical,
+                      name=f"TONS{'_SYM' if symmetric else ''} {podspec}")
+    return SynthesisResult(topo, lambdas, times, status)

@@ -1,0 +1,65 @@
+"""Deterministic synthetic LM data pipeline.
+
+Stateless-by-step: batch(step) is a pure function of (seed, step, shape),
+so restarts resume exactly, any DP shard can regenerate its slice without
+coordination, and elastic re-sharding (different device counts across
+restarts) needs no data-state migration. The token stream is a mixture of
+Zipf-distributed unigrams and short Markov motifs so the loss actually
+decreases during the example runs (pure uniform noise would not train).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    zipf_a: float = 1.2
+    motif_len: int = 8
+    n_motifs: int = 64
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # fixed motif bank: repeated sub-sequences give learnable structure
+        self.motifs = rng.integers(0, cfg.vocab,
+                                   size=(cfg.n_motifs, cfg.motif_len))
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        p = ranks ** (-cfg.zipf_a)
+        self.p = (p / p.sum()).astype(np.float64)
+
+    def batch(self, step: int, shard: int = 0, n_shards: int = 1
+              ) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        assert cfg.global_batch % n_shards == 0
+        bsz = cfg.global_batch // n_shards
+        rng = np.random.default_rng(
+            (cfg.seed * 1_000_003 + step) * 4096 + shard)
+        toks = rng.choice(cfg.vocab, size=(bsz, cfg.seq_len + 1), p=self.p)
+        # plant motifs so there is signal to learn
+        n_plant = (cfg.seq_len // cfg.motif_len) // 2
+        for b in range(bsz):
+            for _ in range(n_plant):
+                mi = rng.integers(0, cfg.n_motifs)
+                pos = rng.integers(0, cfg.seq_len + 1 - cfg.motif_len)
+                toks[b, pos:pos + cfg.motif_len] = self.motifs[mi]
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    def jax_batch(self, step: int, extra: Optional[Dict] = None):
+        b = {k: jnp.asarray(v) for k, v in self.batch(step).items()}
+        if extra:
+            b.update(extra)
+        return b

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: (B, Hq, Sq, hd); k, v: (B, Hkv, Skv, hd). Materialised softmax
+    attention with GQA head grouping -- the correctness oracle."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    qg = q.reshape(B, Hkv, rep, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qg * (hd ** -0.5),
+                   k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bgkd->bgrqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, hd).astype(q.dtype)
+
+
+def minplus_ref(a, b):
+    """(min, +) matrix product: out[i, j] = min_k a[i, k] + b[k, j]."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def apsp_ref(adj, max_iters: int | None = None):
+    """All-pairs shortest paths by repeated (min,+) squaring of the hop
+    matrix (diagonal 0, edge 1, else +inf)."""
+    n = adj.shape[0]
+    d = adj
+    iters = max_iters or int(math.ceil(math.log2(max(n - 1, 1))))
+    for _ in range(iters):
+        d = minplus_ref(d, d)
+    return d

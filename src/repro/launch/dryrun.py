@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two XLA_FLAGS lines above MUST stay the first statements in this module
+(jax locks the device count at first init). The dry-run never allocates
+arrays: all inputs are ShapeDtypeStructs and compilation is AOT.
+
+HLO cost analysis visits while-loop (lax.scan) bodies once, so for the
+roofline numbers each single-pod cell is additionally lowered at two small
+UNROLLED depths and flops/bytes/collective-bytes are linearly extrapolated
+to the full depth (they are exactly affine in trip count). The full scanned
+artifact is still what certifies sharding, memory, and the collective
+schedule.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+      --shape train_4k --mesh both --outdir benchmarks/results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.registry import get_config, list_archs
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, decode_specs, model_state_specs
+from repro.launch.steps import make_prefill_step, make_serve_step, \
+    make_train_step
+from repro.parallel.api import filter_spec, mesh_context
+from repro.parallel.sharding import cache_specs
+
+
+def build_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Lower the cell's step function; returns (lowered, tokens_per_step)."""
+    with mesh_context(mesh):
+        rep = NamedSharding(mesh, P())
+        if shape.kind == "train":
+            params, pspec, opt, ospec = model_state_specs(cfg, mesh,
+                                                          with_opt=True)
+            batch, bspec = batch_specs(cfg, shape, mesh)
+            step = make_train_step(cfg)
+            stats_spec = {"loss": rep, "lr": rep, "grad_norm": rep}
+            jitted = jax.jit(step,
+                             in_shardings=(pspec, ospec, bspec),
+                             out_shardings=(pspec, ospec, stats_spec),
+                             donate_argnums=(0, 1))
+            return jitted.lower(params, opt, batch), \
+                shape.global_batch * shape.seq_len
+        if shape.kind == "prefill":
+            params, pspec, _, _ = model_state_specs(cfg, mesh, with_opt=False)
+            batch, bspec = batch_specs(cfg, shape, mesh)
+            step = make_prefill_step(cfg)
+            out_shape = jax.eval_shape(step, params, batch)
+            logits_spec = NamedSharding(mesh, filter_spec(
+                (("pod", "data"), None, "model"), mesh, out_shape[0].shape))
+            cspec = cache_specs(out_shape[1], mesh)
+            jitted = jax.jit(step, in_shardings=(pspec, bspec),
+                             out_shardings=(logits_spec, cspec))
+            return jitted.lower(params, batch), \
+                shape.global_batch * shape.seq_len
+        # decode
+        params, pspec, _, _ = model_state_specs(cfg, mesh, with_opt=False)
+        (token, pos, caches), (tspec, posspec, cspec) = \
+            decode_specs(cfg, shape, mesh)
+        step = make_serve_step(cfg)
+        out_shape = jax.eval_shape(step, params, token, pos, caches)
+        logits_spec = NamedSharding(mesh, filter_spec(
+            (("pod", "data"), None, "model"), mesh, out_shape[0].shape))
+        jitted = jax.jit(step,
+                         in_shardings=(pspec, tspec, posspec, cspec),
+                         out_shardings=(logits_spec, cspec),
+                         donate_argnums=(3,))
+        return jitted.lower(params, token, pos, caches), shape.global_batch
+
+
+def analyze(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    rec = {
+        "flops_per_dev": float(ca.get("flops", 0.0)),
+        "bytes_per_dev": float(ca.get("bytes accessed", 0.0)),
+    }
+    txt = compiled.as_text()
+    rec["hlo_len"] = len(txt)
+    coll = H.collective_stats(txt)
+    rec["collectives"] = coll
+    rec["wire_bytes_per_dev"] = sum(v["wire_bytes"] for v in coll.values())
+    rec["collective_operand_bytes_per_dev"] = \
+        sum(v["operand_bytes"] for v in coll.values())
+    try:
+        ma = compiled.memory_analysis()
+        live = (ma.argument_size_in_bytes - ma.alias_size_in_bytes +
+                ma.output_size_in_bytes + ma.temp_size_in_bytes)
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_live_bytes": int(live),
+            "fits_v5e_16g": bool(live < 16e9),
+            "fits_v5p_95g": bool(live < 95e9),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+    return rec
+
+
+def depth_variants(cfg: ModelConfig, seq_len: int):
+    """Two reduced-depth UNROLLED configs + the full trip count."""
+    noscan = dict(unroll=True)
+    if cfg.family == "hybrid":
+        full = cfg.n_layers // cfg.hybrid_period
+        mk = lambda t: dataclasses.replace(
+            cfg, n_layers=t * cfg.hybrid_period, **noscan)
+        ts = [1, 2]
+    elif cfg.family == "encdec":
+        full = cfg.enc_layers
+        mk = lambda t: dataclasses.replace(
+            cfg, enc_layers=t, dec_layers=t, n_layers=2 * t, **noscan)
+        ts = [2, 4]
+    else:
+        full = cfg.n_layers - cfg.first_k_dense
+        mk = lambda t: dataclasses.replace(
+            cfg, n_layers=cfg.first_k_dense + t, **noscan)
+        ts = [2, 4]
+    return full, ts, mk
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             roofline: bool = True, opts: str = "") -> dict:
+    arch_cfg = get_config(arch)
+    cfg = arch_cfg.model
+    if opts:
+        flags = {f"opt_{o.strip()}": True for o in opts.split(",") if o}
+        cfg = dataclasses.replace(cfg, **flags)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "opts": opts,
+           "chips": int(mesh.devices.size), "kind": shape.kind}
+
+    t0 = time.time()
+    lowered, tokens = build_lowered(cfg, shape, mesh)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+    rec.update(analyze(compiled))
+
+    chips = rec["chips"]
+    n_active = cfg.active_param_count()
+    rec["params"] = cfg.param_count()
+    rec["active_params"] = n_active
+    rec["model_flops"] = H.model_flops(n_active, tokens, shape.kind)
+
+    if roofline:
+        full_t, ts, mk = depth_variants(cfg, shape.seq_len)
+        metrics = []
+        for t in ts:
+            vlow, _ = build_lowered(mk(t), shape, mesh)
+            vcomp = vlow.compile()
+            va = analyze(vcomp)
+            metrics.append((t, va["flops_per_dev"], va["bytes_per_dev"],
+                            va["wire_bytes_per_dev"]))
+        (t1_, f1, b1, w1), (t2_, f2, b2, w2) = metrics
+        ext = {}
+        for name, v1, v2 in [("flops_per_dev", f1, f2),
+                             ("bytes_per_dev", b1, b2),
+                             ("wire_bytes_per_dev", w1, w2)]:
+            slope = (v2 - v1) / (t2_ - t1_)
+            ext[name] = v1 + slope * (full_t - t1_)
+        rec["extrapolated"] = {**ext, "depth_points": metrics,
+                               "full_trips": full_t}
+        rec["terms"] = H.roofline_terms(ext["flops_per_dev"],
+                                        ext["bytes_per_dev"],
+                                        ext["wire_bytes_per_dev"], chips)
+        hlo_total = ext["flops_per_dev"] * chips
+        rec["useful_flop_ratio"] = rec["model_flops"] / hlo_total \
+            if hlo_total else 0.0
+    else:
+        rec["terms"] = H.roofline_terms(rec["flops_per_dev"],
+                                        rec["bytes_per_dev"],
+                                        rec["wire_bytes_per_dev"], chips)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--outdir", default="benchmarks/results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opts", default="",
+                    help="comma list: moe_local_dispatch,shard_carry")
+    args = ap.parse_args()
+
+    outdir = Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16",
+                       make_production_mesh(multi_pod=False), True))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True), False))
+
+    for arch in archs:
+        arch_cfg = get_config(arch)
+        shapes = list(arch_cfg.shapes) if args.shape == "all" \
+            else [args.shape]
+        for shape_name in shapes:
+            if shape_name not in arch_cfg.shapes:
+                print(f"SKIP {arch} x {shape_name}: {arch_cfg.notes}")
+                continue
+            for mesh_name, mesh, roofline in meshes:
+                suffix = f"__opt-{args.opts}" if args.opts else ""
+                out = outdir / \
+                    f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+                if out.exists() and not args.force:
+                    print(f"cached {out.name}", flush=True)
+                    continue
+                print(f"=== {arch} x {shape_name} x {mesh_name}", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, mesh, mesh_name,
+                                   roofline=roofline, opts=args.opts)
+                    print(f"    ok lower={rec['lower_s']}s "
+                          f"compile={rec['compile_s']}s "
+                          f"dom={rec['terms']['dominant']}", flush=True)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"    FAIL {e}", flush=True)
+                out.write_text(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

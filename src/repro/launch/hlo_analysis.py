@@ -1,0 +1,114 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+cost_analysis() gives per-device HLO FLOPs / bytes; collective traffic is
+NOT in cost_analysis, so we parse the (SPMD, per-device) HLO text and sum
+operand sizes of every collective op. We record both the raw operand bytes
+(the metric requested by the assignment) and a modeled bytes-on-wire that
+accounts for group size and algorithm (ring) per collective type.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+# TPU v5e-class constants (per assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+LINKS_PER_CHIP = 6           # 3D torus / TONS radix
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(?:^|\s)(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_TYPE_RE = re.compile(r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64)"
+                      r"\[([0-9,]*)\]")
+# iota form: replica_groups=[num_groups,group_size]<=[...]
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: count, operand bytes (per-device shard sizes as
+    lowered -- the assignment's raw metric) and modeled ring bytes-on-wire
+    per device. Result-type based: modern HLO text doesn't annotate operand
+    types, so sizes derive from each op's result type + group size."""
+    stats = defaultdict(lambda: {"count": 0, "operand_bytes": 0.0,
+                                 "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        lhs = line.split("=", 1)
+        if len(lhs) < 2 or "=" not in line[:m.start() + 1]:
+            continue
+        kind = m.group(1)
+        type_region = line[line.index("=") + 1:m.start()]
+        types = list(_TYPE_RE.finditer(type_region))
+        if not types:
+            continue
+        b_res = _shape_bytes(types[-1])  # result (last element for tuples)
+        g = 1
+        gm = _GROUP_IOTA_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm = _GROUP_LIST_RE.search(line)
+            if gm:
+                g = len([x for x in gm.group(1).split(",") if x.strip()])
+        if kind == "all-reduce":
+            operand, wire = b_res, 2.0 * b_res * (g - 1) / max(g, 1)
+        elif kind == "all-gather":
+            operand = b_res / max(g, 1)
+            wire = b_res * (g - 1) / max(g, 1)
+        elif kind == "reduce-scatter":
+            operand, wire = b_res * g, b_res * (g - 1)
+        elif kind == "all-to-all":
+            operand, wire = b_res, b_res * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            operand, wire = b_res, float(b_res)
+        s = stats[kind]
+        s["count"] += 1
+        s["operand_bytes"] += operand
+        s["wire_bytes"] += wire
+    return dict(stats)
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float, chips: int) -> Dict[str, float]:
+    """Three roofline terms in seconds (per assignment formulas, with
+    HLO totals = per-device x chips)."""
+    total_flops = flops_per_dev * chips
+    total_bytes = bytes_per_dev * chips
+    total_wire = wire_bytes_per_dev * chips
+    t_compute = total_flops / (chips * PEAK_FLOPS)
+    t_memory = total_bytes / (chips * HBM_BW)
+    t_collective = total_wire / (chips * LINK_BW * LINKS_PER_CHIP)
+    terms = {"t_compute": t_compute, "t_memory": t_memory,
+             "t_collective": t_collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["roofline_fraction"] = terms[dom] and max(
+        t_compute / max(terms[dom], 1e-30), 0.0)
+    return terms
+
+
+def model_flops(active_params: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference) with N active params."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active_params * tokens

@@ -1,0 +1,132 @@
+"""Batched serving loop with continuous batching over fixed decode slots.
+
+serve_step is the same function the decode_32k / long_500k dry-run cells
+lower; here it runs a real token loop on reduced configs.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, list_archs
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: Optional[List[int]] = None
+
+
+class Server:
+    """Fixed-slot continuous batching: each slot holds one sequence; free
+    slots are refilled from the queue (prefill), all active slots advance
+    one token per serve_step."""
+
+    def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.caches = M.empty_cache(cfg, n_slots, max_len,
+                                    max_len if cfg.family == "encdec"
+                                    else None)
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self.pos = np.zeros(n_slots, np.int32)
+        self.remaining = np.zeros(n_slots, np.int32)
+        self.active = np.zeros(n_slots, bool)
+        self.rids = np.full(n_slots, -1)
+        self.results = {}
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_fn(cfg, p, c, t, pos))
+
+    def _prefill_one(self, slot: int, req: Request):
+        prompt = jnp.asarray(req.prompt)[None, :]
+        batch = {"tokens": prompt}
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (1, prompt.shape[1], self.cfg.d_model), jnp.bfloat16)
+        logits, cache = M.prefill_fn(self.cfg, self.params, batch,
+                                     cache_len=self.max_len)
+
+        # splice the single-sequence cache into this slot's batch lane
+        def splice(full, one):
+            for ax in range(full.ndim):
+                if one.shape[ax] == 1 and full.shape[ax] == self.n_slots:
+                    return jax.lax.dynamic_update_index_in_dim(
+                        full, jnp.take(one, 0, axis=ax), slot, axis=ax)
+            return full
+
+        self.caches = jax.tree.map(splice, self.caches, cache)
+        tok = int(jnp.argmax(logits[0, -1]))
+        self.tokens = self.tokens.at[slot, 0].set(tok)
+        self.pos[slot] = req.prompt.shape[0]
+        self.remaining[slot] = req.max_new
+        self.active[slot] = True
+        self.rids[slot] = req.rid
+        self.results[req.rid] = [tok]
+
+    def run(self, requests: List[Request], greedy: bool = True):
+        queue = list(requests)
+        served = 0
+        steps = 0
+        while queue or self.active.any():
+            for slot in range(self.n_slots):
+                if not self.active[slot] and queue:
+                    self._prefill_one(slot, queue.pop(0))
+            pos = int(self.pos.max())  # uniform pos approximation
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               self.tokens, jnp.int32(pos))
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            self.tokens = nxt[:, None]
+            steps += 1
+            for slot in range(self.n_slots):
+                if not self.active[slot]:
+                    continue
+                self.results[self.rids[slot]].append(int(nxt[slot]))
+                self.pos[slot] += 1
+                self.remaining[slot] -= 1
+                if self.remaining[slot] <= 0 or self.pos[slot] >= \
+                        self.max_len - 1:
+                    self.active[slot] = False
+                    served += 1
+        return {"served": served, "decode_steps": steps,
+                "results": self.results}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke_model()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    server = Server(cfg, params, n_slots=args.slots, max_len=128)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab, args.prompt_len),
+                    args.max_new) for i in range(args.requests)]
+    t0 = time.time()
+    out = server.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(v) for v in out["results"].values())
+    print(f"[serve] arch={args.arch} served={out['served']} "
+          f"decode_steps={out['decode_steps']} tokens={toks} "
+          f"({toks / dt:.1f} tok/s) in {dt:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

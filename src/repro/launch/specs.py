@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every dry-run cell.
+
+``input_specs(arch, shape)`` returns (abstract args, shardings) for the
+step function the cell lowers: train_step / prefill_step / serve_step.
+No device allocation happens anywhere here.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel.api import filter_spec
+from repro.parallel.sharding import cache_specs, param_specs
+
+BATCH = ("pod", "data")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Training / prefill batch arrays."""
+    B, S = shape.global_batch, shape.seq_len
+    sh = lambda spec, shp: NamedSharding(mesh, filter_spec(spec, mesh, shp))
+    batch: Dict[str, Any] = {}
+    shard: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        shard["frames"] = sh((BATCH, None, None), batch["frames"].shape)
+    batch["tokens"] = _sds((B, S), jnp.int32)
+    shard["tokens"] = sh((BATCH, None), (B, S))
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32)
+        shard["labels"] = sh((BATCH, None), (B, S))
+    if cfg.n_vision_tokens:
+        batch["patches"] = _sds((B, cfg.n_vision_tokens, cfg.d_model),
+                                jnp.bfloat16)
+        shard["patches"] = sh((BATCH, None, None), batch["patches"].shape)
+    if B == 1:  # long-context: sequence-parallel over data
+        shard["tokens"] = sh((None, "data"), (B, S))
+        if "frames" in batch:
+            shard["frames"] = sh((None, "data", None), batch["frames"].shape)
+    return batch, shard
+
+
+def model_state_specs(cfg: ModelConfig, mesh, with_opt: bool):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params = jax.eval_shape(partial(M.init_params, cfg), key)
+    pspec = param_specs(params, mesh)
+    if not with_opt:
+        return params, pspec, None, None
+    opt = jax.eval_shape(adamw.init, params)
+    ospec = {"m": param_specs(opt["m"], mesh),
+             "v": param_specs(opt["v"], mesh),
+             "step": NamedSharding(mesh, P())}
+    return params, pspec, opt, ospec
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """(token, pos, caches) stand-ins + shardings for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(
+        partial(M.empty_cache, cfg, B, S, S_enc=S
+                if cfg.family == "encdec" else None))
+    cspec = cache_specs(caches, mesh)
+    token = _sds((B, 1), jnp.int32)
+    tok_spec = NamedSharding(mesh, filter_spec((BATCH, None), mesh, (B, 1)))
+    pos = _sds((), jnp.int32)
+    pos_spec = NamedSharding(mesh, P())
+    return (token, pos, caches), (tok_spec, pos_spec, cspec)

@@ -1,0 +1,35 @@
+"""Step functions the launcher jits: train_step, prefill_step, serve_step."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig = None):
+    from repro.train.loop import TrainConfig, make_step
+    opt_cfg = opt_cfg or adamw.OptConfig()
+    mb = 4 if getattr(cfg, "opt_microbatch4", False) else 1
+    return make_step(cfg, opt_cfg, TrainConfig(microbatches=mb))
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, caches = M.prefill_fn(cfg, params, batch)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One new token against a seq_len-deep cache (decode shapes)."""
+    def serve_step(params, token, pos, caches):
+        logits, caches = M.decode_fn(cfg, params, caches, token, pos)
+        return logits, caches
+
+    return serve_step

@@ -1,0 +1,73 @@
+"""Training launcher: --arch <id> [--smoke] [--steps N] ...
+
+On the CPU container this runs reduced configs; on a real pod the same
+entrypoint runs the full config under make_production_mesh().
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.registry import get_config, list_archs
+from repro.data.synthetic import DataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.optim.adamw import OptConfig
+from repro.parallel.api import mesh_context
+from repro.train.loop import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config for CPU")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", default=None,
+                    choices=[None, "int8"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    arch = get_config(args.arch)
+    cfg = arch.smoke_model() if args.smoke else arch.model
+
+    import numpy as np
+    import jax.numpy as jnp
+    extra = None
+    if cfg.family == "encdec":
+        def extra(step):
+            rng = np.random.default_rng(step)
+            return {"frames": jnp.asarray(rng.normal(size=(
+                args.batch, args.seq, cfg.d_model)).astype(np.float32))}
+    elif cfg.n_vision_tokens:
+        def extra(step):
+            rng = np.random.default_rng(step)
+            return {"patches": jnp.asarray(rng.normal(size=(
+                args.batch, cfg.n_vision_tokens,
+                cfg.d_model)).astype(np.float32))}
+
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                          global_batch=args.batch)
+    tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=args.ckpt_every,
+                     microbatches=args.microbatches,
+                     grad_compression=args.grad_compression)
+    with mesh_context(make_host_mesh()):
+        trainer = Trainer(cfg, data_cfg,
+                          OptConfig(lr=args.lr, total_steps=args.steps,
+                                    warmup_steps=max(args.steps // 10, 5)),
+                          tc, extra_batch=extra)
+        out = trainer.run()
+    print(f"[done] steps={out['final_step']} "
+          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} "
+          f"stragglers={out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,585 @@
+"""Core neural layers: norms, RoPE, GQA attention, MLPs, MoE, Mamba2-SSD.
+
+Everything is written as pure functions over parameter pytrees so that layer
+stacks can be scanned (params stacked on a leading layer axis) and the whole
+model stays compile-friendly for the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.api import wsc
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Initialisation helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype=jnp.bfloat16, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x, weight, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def apply_norm(kind, x, weight):
+    return rmsnorm(x, weight) if kind == "rmsnorm" else layernorm(x, weight)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal, flash-style blocked online softmax in pure jnp).
+# The Pallas kernel in repro.kernels.flash_attention targets the same math;
+# the jnp path is what the dry-run lowers (CPU container, TPU is the target).
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def gqa_attention(q, k, v, *, causal: bool = True, q_offset=0, kv_len=None,
+                  block: int = 1024, unroll: bool = False):
+    """Blocked causal GQA attention.
+
+    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd); Hq % Hkv == 0.
+    q_offset: absolute position of q[0] (for decode/chunked prefill).
+    kv_len: number of valid kv positions (<= Skv), static or traced scalar.
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q * scale).reshape(B, Sq, Hkv, rep, hd)
+
+    blk = min(block, Skv)
+    while Skv % blk:
+        blk //= 2
+    nb = Skv // blk
+    kb = k.reshape(B, nb, blk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, blk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    qpos = q_offset + jnp.arange(Sq)
+    valid_len = Skv if kv_len is None else kv_len
+
+    def body(carry, inp):
+        o, m, l = carry
+        kblk, vblk, bidx = inp
+        kpos = bidx * blk + jnp.arange(blk)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kblk.astype(qg.dtype),
+                       preferred_element_type=jnp.float32)
+        mask = kpos[None, :] < valid_len
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        o = o * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (o, m_new, l), None
+
+    o0 = jnp.zeros((B, Sq, Hkv, rep, hd), jnp.float32)
+    m0 = jnp.full((B, Hkv, rep, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
+    if unroll:  # loop-free lowering for dry-run flop accounting
+        carry = (o0, m0, l0)
+        for i in range(nb):
+            carry, _ = body(carry, (kb[i], vb[i], jnp.int32(i)))
+        o, m, l = carry
+    else:
+        (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0),
+                                    (kb, vb, jnp.arange(nb)))
+    o = o / jnp.maximum(l.transpose(0, 3, 1, 2), 1e-30)[..., None]
+    return o.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """One-step decode. q: (B, 1, Hq, hd); caches: (B, S, Hkv, hd); pos: () int."""
+    B, _, Hq, hd = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q * scale).reshape(B, Hkv, rep, hd)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg, k_cache.astype(qg.dtype),
+                   preferred_element_type=jnp.float32)
+    mask = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+# --- attention block params -------------------------------------------------
+
+
+def init_attention(key, cfg) -> Params:
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], (D, Hq * hd)),
+        "wk": dense_init(ks[1], (D, Hkv * hd)),
+        "wv": dense_init(ks[2], (D, Hkv * hd)),
+        "wo": dense_init(ks[3], (Hq * hd, D)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), jnp.bfloat16)
+        p["bk"] = jnp.zeros((Hkv * hd,), jnp.bfloat16)
+        p["bv"] = jnp.zeros((Hkv * hd,), jnp.bfloat16)
+    return p
+
+
+def attn_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p, x, cfg, positions):
+    """Full (training/prefill) attention sub-layer, returns (out, (k, v))."""
+    q, k, v = attn_qkv(p, x, cfg, positions)
+    o = gqa_attention(q, k, v, causal=cfg.causal, block=cfg.attn_block,
+                      unroll=cfg.unroll)
+    B, S, _ = x.shape
+    return o.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def attention_decode(p, x, cfg, cache, pos):
+    """x: (B, 1, D). cache: dict(k, v) with (B, S, Hkv, hd). Returns out, cache."""
+    q, k, v = attn_qkv(p, x, cfg, positions=pos[None] if jnp.ndim(pos) == 0 else pos)
+    z = jnp.zeros_like(pos)
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (z, pos, z, z))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (z, pos, z, z))
+    o = decode_attention(q, kc, vc, pos)
+    B = x.shape[0]
+    return o.reshape(B, 1, -1) @ p["wo"], {"k": kc, "v": vc}
+
+
+def cross_attention(p, x, enc_kv, cfg):
+    """Encoder-decoder cross attention (non-causal over encoder states)."""
+    B, S, _ = x.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, Hq, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(Hq, hd)
+    k, v = enc_kv
+    o = gqa_attention(q, k, v, causal=False, block=cfg.attn_block,
+                      unroll=cfg.unroll)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(ks[0], (d_model, d_ff)),
+        "w3": dense_init(ks[1], (d_model, d_ff)),
+        "w2": dense_init(ks[2], (d_ff, d_model)),
+    }
+
+
+def glu_mlp(p, x, act: str = "silu"):
+    h = x @ p["w1"]
+    g = x @ p["w3"]
+    h = (jax.nn.gelu(h) if act == "gelu" else jax.nn.silu(h)) * g
+    return h @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (token-dropping, capacity-based, EP-shardable)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg) -> Params:
+    D, F = cfg.d_model, cfg.moe_d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), dtype=jnp.float32),
+        "w1": dense_init(ks[1], (E, D, F)),
+        "w3": dense_init(ks[2], (E, D, F)),
+        "w2": dense_init(ks[3], (E, F, D)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], D, F * cfg.n_shared_experts)
+    return p
+
+
+def _dp_shards() -> int:
+    from repro.parallel.api import get_mesh
+    mesh = get_mesh()
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def moe_ffn_local(p, x, cfg):
+    """Hierarchical MoE dispatch (perf iteration H1, EXPERIMENTS section
+    Perf): token sort / capacity scatter are performed *per data shard* so
+    no global argsort or cross-shard scatter is lowered; the only
+    cross-device movement is the (dp, E, C, D) buffer resharding from
+    batch-major to expert-major -- a clean all-to-all, exactly the traffic
+    TONS optimizes the fabric for."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    dp = _dp_shards()
+    if dp <= 1 or T % dp or (T // dp) % 1:
+        return moe_ffn(p, x, cfg)
+    Tl = T // dp
+    TKl = Tl * K
+    cf = 1.0 if cfg.opt_moe_cf1 else cfg.capacity_factor
+    C = max(8, int(Tl * K * cf / E))
+
+    xf = x.reshape(dp, Tl, D)
+    xf = wsc(xf, ("pod", "data"), None, None)
+    logits = jnp.einsum("gtd,de->gte", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                     # (dp, Tl, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    fe = eidx.reshape(dp, TKl)
+    ft = jnp.broadcast_to(jnp.repeat(jnp.arange(Tl), K), (dp, TKl))
+    fg = gate.reshape(dp, TKl)
+    order = jnp.argsort(fe, axis=1)                          # local sorts
+    se = jnp.take_along_axis(fe, order, 1)
+    st = jnp.take_along_axis(ft, order, 1)
+    sg = jnp.take_along_axis(fg, order, 1)
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E)))(se)
+    pos = jnp.arange(TKl)[None, :] - jnp.take_along_axis(starts, se, 1)
+    keep = pos < C
+    posc = jnp.where(keep, pos, 0)
+    gidx = jax.lax.broadcasted_iota(jnp.int32, (dp, TKl), 0)
+
+    buf = jnp.zeros((dp, E, C, D), x.dtype)
+    upd = jnp.where(keep[..., None],
+                    jnp.take_along_axis(xf, st[..., None], axis=1), 0)
+    buf = buf.at[gidx, se, posc].add(upd)
+    buf = wsc(buf, ("pod", "data"), "model", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w1"])
+    g = jnp.einsum("gecd,edf->gecf", buf, p["w3"])
+    h = (jax.nn.gelu(h) if cfg.act == "gelu" else jax.nn.silu(h)) * g
+    out = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+    out = wsc(out, ("pod", "data"), "model", None, None)
+
+    tok = out[gidx, se, posc]
+    tok = jnp.where(keep[..., None], tok, 0) * sg[..., None].astype(x.dtype)
+    # bf16 combine: <= top_k summands per token, safe at half precision
+    y = jnp.zeros((dp, Tl, D), x.dtype)
+    y = y.at[gidx, st].add(tok)
+    y = y.reshape(B, S, D)
+
+    if cfg.n_shared_experts:
+        y = y + glu_mlp(p["shared"], x.reshape(B, S, D), cfg.act)
+
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[fe.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+    return y, aux
+
+
+def moe_ffn(p, x, cfg):
+    """Top-k capacity-based MoE. x: (B, S, D) -> (B, S, D).
+
+    Tokens are sorted by expert assignment, scattered into a per-expert
+    capacity buffer (E, C, D) that is sharding-constrained onto the expert-
+    parallel mesh axis -- under pjit this induces the all-to-all dispatch the
+    paper's all-to-all traffic analysis targets.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    TK = T * K
+    C = max(8, int(T * K * cfg.capacity_factor / E))
+
+    xf = x.reshape(T, D)
+    logits = (xf.astype(jnp.float32)) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                      # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    fe = eidx.reshape(TK)
+    ft = jnp.repeat(jnp.arange(T), K)
+    fg = gate.reshape(TK)
+    order = jnp.argsort(fe)
+    se, st, sg = fe[order], ft[order], fg[order]
+    starts = jnp.searchsorted(se, jnp.arange(E))              # (E,)
+    pos_in_e = jnp.arange(TK) - starts[se]
+    keep = pos_in_e < C
+
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[se, jnp.where(keep, pos_in_e, 0)].add(
+        jnp.where(keep[:, None], xf[st], 0))
+    buf = wsc(buf, "model", ("pod", "data"), None)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    h = (jax.nn.gelu(h) if cfg.act == "gelu" else jax.nn.silu(h)) * g
+    out = jnp.einsum("ecf,efd->ecd", h, p["w2"])
+    out = wsc(out, "model", ("pod", "data"), None)
+
+    tok_out = out[se, jnp.where(keep, pos_in_e, 0)]
+    tok_out = jnp.where(keep[:, None], tok_out, 0) * sg[:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), jnp.float32).at[st].add(tok_out.astype(jnp.float32))
+    y = y.astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        y = y + glu_mlp(p["shared"], xf, cfg.act)
+
+    # load-balancing aux loss (Switch-style), returned via side channel
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[fe].add(1.0) / TK
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) -- chunked training form + O(1) recurrent decode form.
+# Adapted to TPU: the chunked algorithm is pure matmuls (MXU-friendly);
+# chunk size defaults to 128 to match MXU tiling.
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg) -> Params:
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    H = d_in // cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = d_in + 2 * G * N
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * d_in + 2 * G * N + H)),
+        "conv_w": dense_init(ks[1], (conv_dim, cfg.ssm_conv), scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.bfloat16),
+        "dt_bias": jnp.log(jnp.exp(
+            jnp.linspace(1e-3, 0.1, H).astype(jnp.float32)) - 1.0 + 1e-9),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.zeros((d_in,), jnp.bfloat16),
+        "out_proj": dense_init(ks[5], (d_in, D)),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv. u: (B, S, C); w: (C, K)."""
+    K = w.shape[1]
+    acc = u * w[:, K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :u.shape[1]]
+        acc = acc + shifted * w[:, K - 1 - i]
+    return acc + b
+
+
+def _mamba_proj(p, x, cfg):
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    H = d_in // cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * G * N], axis=-1)
+    return z, xbc, dt_raw, (d_in, G, N, H)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD. xh: (B, L, H, Pd); dt: (B, L, H); A: (H,) (negative);
+    Bm, Cm: (B, L, G, N). Returns y: (B, L, H, Pd) and final state (B, H, Pd, N)."""
+    b, l_orig, h, pd = xh.shape
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    pad = (-l_orig) % chunk
+    if pad:  # zero-pad: dt=0 makes padded steps identity on the state
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                               [(0, 0)] * (a.ndim - 2))
+        xh, dt, Bm, Cm = zp(xh), zp(dt), zp(Bm), zp(Cm)
+    l = l_orig + pad
+    nc = l // chunk
+
+    xc = xh.reshape(b, nc, chunk, h, pd).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+
+    dA = dtc * A  # (b, nc, q, h), negative
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk: M[i,j] = C_i . B_j * exp(dA_cs[i]-dA_cs[j]) * dt_j  (i>=j)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b,nc,q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)
+    ddec = dA_cs[:, :, :, None, :].transpose(0, 1, 4, 2, 3) \
+        - dA_cs[:, :, None, :, :].transpose(0, 1, 4, 2, 3)  # (b,nc,h,q,k)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    M = jnp.where(tri, scores * jnp.exp(ddec), 0.0)
+    M = M * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # multiply dt_k
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M, xc)
+
+    # chunk-end states: S_c = sum_j exp(dA_cs[-1]-dA_cs[j]) dt_j B_j (x) x_j
+    dec_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs) * dtc  # (b,nc,q,h)
+    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", dec_end, Bh, xc)
+
+    # inter-chunk recurrence over nc: parallel (log-depth) associative scan
+    # -- TPU-native replacement for the sequential chunk loop, and loop-free
+    # so HLO cost analysis sees the true op counts.
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (b, nc, h)
+    dec = chunk_decay[:, :, :, None, None]
+
+    def combine(a, bseg):
+        da, sa = a
+        db, sb = bseg
+        return da * db, sa * db + sb
+
+    _, s_incl = jax.lax.associative_scan(combine, (dec, S), axis=1)
+    s_final = s_incl[:, -1]
+    s_prevs = jnp.concatenate(
+        [jnp.zeros_like(s_incl[:, :1]), s_incl[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                         Ch, jnp.exp(dA_cs), s_prevs)
+    y = (y_intra + y_inter).reshape(b, l, h, pd)[:, :l_orig]
+    return y, s_final
+
+
+def ssd_sequential(xh, dt, A, Bm, Cm):
+    """Step-by-step oracle for tests. Same signature as ssd_chunked."""
+    b, l, h, pd = xh.shape
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp  # (b,h,p), (b,h), (b,g,n), (b,g,n)
+        Bh = jnp.repeat(B_t, rep, axis=1)
+        Ch = jnp.repeat(C_t, rep, axis=1)
+        decay = jnp.exp(dt_t * A)  # (b,h)
+        state = state * decay[:, :, None, None] + \
+            (dt_t[:, :, None] * x_t)[..., None] * Bh[:, :, None, :]
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+        return state, y_t
+
+    s0 = jnp.zeros((b, h, pd, n), jnp.float32)
+    xs = (xh.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2, 3).astype(jnp.float32),
+          Cm.transpose(1, 0, 2, 3).astype(jnp.float32))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s_final
+
+
+def mamba_block(p, x, cfg, return_cache: bool = False):
+    """Training/prefill form. x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    z, xbc_raw, dt_raw, (d_in, G, N, H) = _mamba_proj(p, x, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + G * N], axis=-1)
+    xh = xs.reshape(B, S, H, cfg.ssm_head_dim)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    chunk = min(cfg.ssm_chunk, S)
+    y, s_final = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = y @ p["out_proj"]
+    if return_cache:
+        K = cfg.ssm_conv
+        conv_state = xbc_raw[:, S - (K - 1):, :]
+        return out, {"conv": conv_state, "ssm": s_final}
+    return out
+
+
+def mamba_decode(p, x, cfg, cache):
+    """One-step decode. x: (B, 1, D); cache: {conv: (B, K-1, C), ssm: (B,H,P,N)}."""
+    B = x.shape[0]
+    z, xbc, dt_raw, (d_in, G, N, H) = _mamba_proj(p, x, cfg)
+    xbc = xbc[:, 0]  # (B, C)
+    conv_state = cache["conv"]  # (B, K-1, C)
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,ck->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+    xs, Bm, Cm = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
+    xh = xs.reshape(B, H, cfg.ssm_head_dim).astype(jnp.float32)
+    Bm = jnp.repeat(Bm.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cm.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)
+    state = cache["ssm"] * decay[:, :, None, None] + \
+        (dt[:, :, None] * xh)[..., None] * Bm[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cm) + xh * p["D"][:, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["out_proj"], {"conv": new_conv, "ssm": state}

@@ -1,0 +1,402 @@
+"""Decoder-only LM assembly (dense / moe / ssm / hybrid families).
+
+Parameters are stacked over a leading layer axis and the stack is applied
+with ``lax.scan`` (rematerialised) so that HLO size is independent of depth
+-- essential for the 64-compile dry-run sweep.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.api import wsc
+
+Params = Dict[str, Any]
+
+
+def _remat_policy(cfg):
+    if getattr(cfg, "opt_remat_dots", False):
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / structure
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, mixer: str, ffn: Optional[str]) -> Params:
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    p: Params = {"ln1": jnp.zeros((D,), jnp.bfloat16)}
+    if mixer == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg)
+    else:
+        p["mamba"] = L.init_mamba(ks[0], cfg)
+    if ffn is not None:
+        p["ln2"] = jnp.zeros((D,), jnp.bfloat16)
+        if ffn == "moe":
+            p["moe"] = L.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], D, cfg.d_ff)
+    return p
+
+
+def _layer_fwd(cfg, mixer, ffn, p, x, positions, want_cache=False):
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    cache = None
+    if mixer == "attn":
+        a, (k, v) = L.attention_block(p["attn"], h, cfg, positions)
+        if want_cache:
+            cache = {"k": k, "v": v}
+    else:
+        if want_cache:
+            a, cache = L.mamba_block(p["mamba"], h, cfg, return_cache=True)
+        else:
+            a = L.mamba_block(p["mamba"], h, cfg)
+    x = x + a
+    aux = jnp.zeros((), jnp.float32)
+    if ffn is not None:
+        h = L.apply_norm(cfg.norm, x, p["ln2"])
+        if ffn == "moe":
+            moe = L.moe_ffn_local if cfg.opt_moe_local_dispatch else \
+                L.moe_ffn
+            f, aux = moe(p["moe"], h, cfg)
+        else:
+            f = L.glu_mlp(p["mlp"], h, cfg.act)
+        x = x + f
+    return x, aux, cache
+
+
+def _layer_decode(cfg, mixer, ffn, p, x, cache, pos):
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    if mixer == "attn":
+        a, cache = L.attention_decode(p["attn"], h, cfg, cache, pos)
+    else:
+        a, cache = L.mamba_decode(p["mamba"], h, cfg, cache)
+    x = x + a
+    if ffn is not None:
+        h = L.apply_norm(cfg.norm, x, p["ln2"])
+        if ffn == "moe":
+            f, _ = L.moe_ffn(p["moe"], h, cfg)
+        else:
+            f = L.glu_mlp(p["mlp"], h, cfg.act)
+        x = x + f
+    return x, cache
+
+
+def scan_blocks(body, carry, xs, *, unroll: bool = False,
+                remat: bool = False, remat_policy=None):
+    """lax.scan over stacked layer params -- or an unrolled Python loop when
+    ``unroll`` (used by the dry-run's depth-extrapolated flop accounting,
+    since HLO cost analysis visits while bodies once)."""
+    if remat:
+        fn = jax.checkpoint(body, policy=remat_policy) if remat_policy \
+            else jax.checkpoint(body)
+    else:
+        fn = body
+    if not unroll:
+        return jax.lax.scan(fn, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = fn(carry, xi)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+
+def _empty_attn_cache(cfg, B, S, dtype=jnp.bfloat16):
+    return {"k": jnp.zeros((B, S, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((B, S, cfg.n_kv_heads, cfg.head_dim), dtype)}
+
+
+def _empty_mamba_cache(cfg, B):
+    d_in = cfg.d_inner
+    conv_dim = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {"conv": jnp.zeros((B, cfg.ssm_conv - 1, conv_dim), jnp.bfloat16),
+            "ssm": jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Segment plan: contiguous runs of layers sharing (mixer, ffn) structure.
+# dense/ssm: one segment; moe: first_k_dense unscanned head + scanned body;
+# hybrid: scan over super-blocks of `hybrid_period` heterogeneous sub-layers.
+# ---------------------------------------------------------------------------
+
+
+def _plan(cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        n_super = cfg.n_layers // period
+        subs = [(cfg.mixer_kind(i), cfg.ffn_kind(i)) for i in range(period)]
+        return {"kind": "hybrid", "n_super": n_super, "subs": subs}
+    kinds = [(cfg.mixer_kind(i), cfg.ffn_kind(i)) for i in range(cfg.n_layers)]
+    head = kinds[:cfg.first_k_dense]
+    body = kinds[cfg.first_k_dense:]
+    assert all(k == body[0] for k in body), "body layers must be uniform"
+    return {"kind": "flat", "head": head, "body": body[0] if body else None,
+            "n_body": len(body)}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    plan = _plan(cfg)
+    ks = jax.random.split(key, 8)
+    D, V = cfg.d_model, cfg.vocab
+    params: Params = {
+        "emb": L.dense_init(ks[0], (V, D), scale=0.02),
+        "ln_f": jnp.zeros((D,), jnp.bfloat16),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[1], (D, V))
+    if cfg.n_vision_tokens:
+        params["vis_proj"] = L.dense_init(ks[2], (D, D))
+
+    if plan["kind"] == "hybrid":
+        blocks = {}
+        for si, (mixer, ffn) in enumerate(plan["subs"]):
+            lk = jax.random.split(ks[3 + si % 4], plan["n_super"])
+            stacked = [ _init_layer(lk[j], cfg, mixer, ffn)
+                        for j in range(plan["n_super"]) ]
+            blocks[f"sub{si}"] = jax.tree.map(
+                lambda *a: jnp.stack(a), *stacked)
+        params["blocks"] = blocks
+    else:
+        if plan["head"]:
+            params["head_blocks"] = [
+                _init_layer(k, cfg, m, f) for k, (m, f) in
+                zip(jax.random.split(ks[3], len(plan["head"])), plan["head"])]
+        if plan["n_body"]:
+            mixer, ffn = plan["body"]
+            lk = jax.random.split(ks[4], plan["n_body"])
+            stacked = [_init_layer(lk[j], cfg, mixer, ffn)
+                       for j in range(plan["n_body"])]
+            params["blocks"] = jax.tree.map(lambda *a: jnp.stack(a), *stacked)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training) and loss
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg, params, tokens, extra_embeds=None):
+    x = jnp.take(params["emb"], tokens, axis=0).astype(jnp.bfloat16)
+    if cfg.n_vision_tokens and extra_embeds is not None:
+        vis = (extra_embeds.astype(jnp.bfloat16) @ params["vis_proj"])
+        x = x.at[:, :cfg.n_vision_tokens, :].add(vis)
+    return x
+
+
+def forward(cfg: ModelConfig, params: Params, tokens,
+            extra_embeds=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S) -> logits (B, S, V), aux loss."""
+    plan = _plan(cfg)
+    B, S = tokens.shape
+    x = _embed(cfg, params, tokens, extra_embeds)
+    x = wsc(x, ("pod", "data"), None, None)
+    positions = jnp.arange(S)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if plan["kind"] == "hybrid":
+        subs = plan["subs"]
+
+        def body(carry, lp):
+            x, aux = carry
+            for si, (mixer, ffn) in enumerate(subs):
+                x, a, _ = _layer_fwd(cfg, mixer, ffn, lp[f"sub{si}"], x,
+                                     positions)
+                aux = aux + a
+            x = wsc(x, ("pod", "data"), None,
+                    "model" if cfg.opt_shard_carry else None)
+            return (x, aux), None
+
+        (x, aux_total), _ = scan_blocks(body, (x, aux_total),
+                                        params["blocks"],
+                                        unroll=cfg.unroll, remat=cfg.remat)
+    else:
+        for lp, (mixer, ffn) in zip(params.get("head_blocks", []),
+                                    plan["head"]):
+            x, a, _ = _layer_fwd(cfg, mixer, ffn, lp, x, positions)
+            aux_total = aux_total + a
+        if plan["n_body"]:
+            mixer, ffn = plan["body"]
+
+            def body(carry, lp):
+                x, aux = carry
+                x, a, _ = _layer_fwd(cfg, mixer, ffn, lp, x, positions)
+                x = wsc(x, ("pod", "data"), None,
+                        "model" if cfg.opt_shard_carry else None)
+                return (x, aux + a), None
+
+            (x, aux_total), _ = scan_blocks(
+                body, (x, aux_total), params["blocks"], unroll=cfg.unroll,
+                remat=cfg.remat, remat_policy=_remat_policy(cfg))
+
+    x = L.apply_norm(cfg.norm, x, params["ln_f"])
+    head = params["emb"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    logits = wsc(logits, ("pod", "data"), None, "model")
+    return logits, aux_total
+
+
+def cross_entropy(logits, labels, z_weight: float = 0.0):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_weight:
+        loss = loss + z_weight * jnp.mean(lse ** 2)
+    return loss
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch, aux_weight: float = 0.01):
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          batch.get("patches"))
+    return cross_entropy(logits, batch["labels"]) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def empty_cache(cfg: ModelConfig, B: int, S: int) -> Params:
+    """Cache pytree matching the block structure (stacked over layers)."""
+    plan = _plan(cfg)
+
+    def one(mixer):
+        return _empty_attn_cache(cfg, B, S) if mixer == "attn" \
+            else _empty_mamba_cache(cfg, B)
+
+    if plan["kind"] == "hybrid":
+        caches = {}
+        for si, (mixer, _) in enumerate(plan["subs"]):
+            c = one(mixer)
+            caches[f"sub{si}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (plan["n_super"],) + a.shape), c)
+        return {"blocks": caches}
+    out = {}
+    if plan["head"]:
+        out["head_blocks"] = [one(m) for (m, _) in plan["head"]]
+    if plan["n_body"]:
+        mixer, _ = plan["body"]
+        c = one(mixer)
+        out["blocks"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (plan["n_body"],) + a.shape), c)
+    return out
+
+
+def _pad_attn_cache(cache, S_total):
+    """Grow prefill (k, v) of length S to the full cache length."""
+    def pad(a):
+        pad_len = S_total - a.shape[1]
+        if pad_len <= 0:
+            return a
+        return jnp.pad(a, ((0, 0), (0, pad_len), (0, 0), (0, 0)))
+    return {"k": pad(cache["k"]), "v": pad(cache["v"])}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, extra_embeds=None,
+            cache_len: Optional[int] = None):
+    """Run the prompt, return (last-token logits, caches)."""
+    plan = _plan(cfg)
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    x = _embed(cfg, params, tokens, extra_embeds)
+    positions = jnp.arange(S)
+
+    def fix(cache, mixer):
+        return _pad_attn_cache(cache, cache_len) if mixer == "attn" else cache
+
+    caches: Params = {}
+    if plan["kind"] == "hybrid":
+        subs = plan["subs"]
+
+        def body(x, lp):
+            outs = {}
+            for si, (mixer, ffn) in enumerate(subs):
+                x, _, c = _layer_fwd(cfg, mixer, ffn, lp[f"sub{si}"], x,
+                                     positions, want_cache=True)
+                outs[f"sub{si}"] = fix(c, mixer)
+            return x, outs
+
+        x, caches["blocks"] = scan_blocks(body, x, params["blocks"],
+                                          unroll=cfg.unroll)
+    else:
+        if plan["head"]:
+            caches["head_blocks"] = []
+            for lp, (mixer, ffn) in zip(params["head_blocks"], plan["head"]):
+                x, _, c = _layer_fwd(cfg, mixer, ffn, lp, x, positions,
+                                     want_cache=True)
+                caches["head_blocks"].append(fix(c, mixer))
+        if plan["n_body"]:
+            mixer, ffn = plan["body"]
+
+            def body(x, lp):
+                x, _, c = _layer_fwd(cfg, mixer, ffn, lp, x, positions,
+                                     want_cache=True)
+                return x, fix(c, mixer)
+
+            x, caches["blocks"] = scan_blocks(body, x, params["blocks"],
+                                              unroll=cfg.unroll)
+
+    x = L.apply_norm(cfg.norm, x[:, -1:, :], params["ln_f"])
+    head = params["emb"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, caches
+
+
+def decode_step(cfg: ModelConfig, params: Params, caches: Params, token,
+                pos):
+    """token: (B, 1) int32; pos: scalar int32 -> (logits (B,1,V), caches)."""
+    plan = _plan(cfg)
+    x = jnp.take(params["emb"], token, axis=0).astype(jnp.bfloat16)
+
+    new_caches: Params = {}
+    if plan["kind"] == "hybrid":
+        subs = plan["subs"]
+
+        def body(x, inp):
+            lp, cache = inp
+            new = {}
+            for si, (mixer, ffn) in enumerate(subs):
+                x, c = _layer_decode(cfg, mixer, ffn, lp[f"sub{si}"], x,
+                                     cache[f"sub{si}"], pos)
+                new[f"sub{si}"] = c
+            return x, new
+
+        x, new_caches["blocks"] = scan_blocks(
+            body, x, (params["blocks"], caches["blocks"]),
+            unroll=cfg.unroll)
+    else:
+        if plan["head"]:
+            new_caches["head_blocks"] = []
+            for lp, cache, (mixer, ffn) in zip(
+                    params["head_blocks"], caches["head_blocks"],
+                    plan["head"]):
+                x, c = _layer_decode(cfg, mixer, ffn, lp, x, cache, pos)
+                new_caches["head_blocks"].append(c)
+        if plan["n_body"]:
+            mixer, ffn = plan["body"]
+
+            def body(x, inp):
+                lp, cache = inp
+                x, c = _layer_decode(cfg, mixer, ffn, lp, x, cache, pos)
+                return x, c
+
+            x, new_caches["blocks"] = scan_blocks(
+                body, x, (params["blocks"], caches["blocks"]),
+                unroll=cfg.unroll)
+
+    x = L.apply_norm(cfg.norm, x, params["ln_f"])
+    head = params["emb"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_caches

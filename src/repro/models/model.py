@@ -1,0 +1,42 @@
+"""Family-dispatching model facade: init / loss / prefill / decode."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm, seq2seq
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.family == "encdec":
+        return seq2seq.init_params(cfg, key)
+    return lm.init_params(cfg, key)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    if cfg.family == "encdec":
+        return seq2seq.loss_fn(cfg, params, batch)
+    return lm.loss_fn(cfg, params, batch)
+
+
+def prefill_fn(cfg: ModelConfig, params, batch, cache_len=None):
+    if cfg.family == "encdec":
+        return seq2seq.prefill(cfg, params, batch["frames"], batch["tokens"],
+                               cache_len=cache_len)
+    return lm.prefill(cfg, params, batch["tokens"], batch.get("patches"),
+                      cache_len=cache_len)
+
+
+def decode_fn(cfg: ModelConfig, params, caches, token, pos):
+    if cfg.family == "encdec":
+        return seq2seq.decode_step(cfg, params, caches, token, pos)
+    return lm.decode_step(cfg, params, caches, token, pos)
+
+
+def empty_cache(cfg: ModelConfig, B: int, S: int, S_enc: Optional[int] = None):
+    if cfg.family == "encdec":
+        return seq2seq.empty_cache(cfg, B, S, S_enc or S)
+    return lm.empty_cache(cfg, B, S)

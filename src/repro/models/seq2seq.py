@@ -1,0 +1,189 @@
+"""Encoder-decoder backbone (seamless-m4t style, audio frontend stubbed).
+
+The encoder consumes precomputed frame embeddings (B, S_enc, D) -- per the
+assignment the modality frontend is a stub supplied by ``input_specs``.
+The decoder is a causal LM with cross-attention into encoder states.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.lm import cross_entropy, scan_blocks
+from repro.parallel.api import wsc
+
+Params = Dict[str, Any]
+
+
+def _init_enc_layer(key, cfg) -> Params:
+    ks = jax.random.split(key, 2)
+    D = cfg.d_model
+    return {
+        "ln1": jnp.zeros((D,), jnp.bfloat16),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": jnp.zeros((D,), jnp.bfloat16),
+        "mlp": L.init_mlp(ks[1], D, cfg.d_ff),
+    }
+
+
+def _init_dec_layer(key, cfg) -> Params:
+    ks = jax.random.split(key, 3)
+    D = cfg.d_model
+    return {
+        "ln1": jnp.zeros((D,), jnp.bfloat16),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln_x": jnp.zeros((D,), jnp.bfloat16),
+        "xattn": L.init_attention(ks[1], cfg),
+        "ln2": jnp.zeros((D,), jnp.bfloat16),
+        "mlp": L.init_mlp(ks[2], D, cfg.d_ff),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 6)
+    D, V = cfg.d_model, cfg.vocab
+    enc = [_init_enc_layer(k, cfg)
+           for k in jax.random.split(ks[0], cfg.enc_layers)]
+    dec = [_init_dec_layer(k, cfg)
+           for k in jax.random.split(ks[1], cfg.dec_layers)]
+    return {
+        "enc_blocks": jax.tree.map(lambda *a: jnp.stack(a), *enc),
+        "enc_ln_f": jnp.zeros((D,), jnp.bfloat16),
+        "dec_blocks": jax.tree.map(lambda *a: jnp.stack(a), *dec),
+        "emb": L.dense_init(ks[2], (V, D), scale=0.02),
+        "ln_f": jnp.zeros((D,), jnp.bfloat16),
+        "lm_head": L.dense_init(ks[3], (D, V)),
+    }
+
+
+def encode(cfg, params, frames):
+    """frames: (B, S_enc, D) -> encoder states."""
+    x = frames.astype(jnp.bfloat16)
+    x = wsc(x, ("pod", "data"), None, None)
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, lp):
+        h = L.apply_norm(cfg.norm, x, lp["ln1"])
+        q, k, v = L.attn_qkv(lp["attn"], h, cfg, positions)
+        a = L.gqa_attention(q, k, v, causal=False, block=cfg.attn_block,
+                            unroll=cfg.unroll)
+        B, S, _ = x.shape
+        x = x + a.reshape(B, S, -1) @ lp["attn"]["wo"]
+        h = L.apply_norm(cfg.norm, x, lp["ln2"])
+        x = x + L.glu_mlp(lp["mlp"], h, cfg.act)
+        return x, None
+
+    x, _ = scan_blocks(body, x, params["enc_blocks"], unroll=cfg.unroll,
+                       remat=cfg.remat)
+    return L.apply_norm(cfg.norm, x, params["enc_ln_f"])
+
+
+def _enc_kv(lp, enc_x, cfg):
+    B, S, _ = enc_x.shape
+    k = (enc_x @ lp["xattn"]["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_x @ lp["xattn"]["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qkv_bias:
+        k = k + lp["xattn"]["bk"].reshape(cfg.n_kv_heads, cfg.head_dim)
+        v = v + lp["xattn"]["bv"].reshape(cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def _dec_layer(cfg, lp, x, enc_x, positions, want_cache=False):
+    h = L.apply_norm(cfg.norm, x, lp["ln1"])
+    a, (k, v) = L.attention_block(lp["attn"], h, cfg, positions)
+    x = x + a
+    h = L.apply_norm(cfg.norm, x, lp["ln_x"])
+    ek, ev = _enc_kv(lp, enc_x, cfg)
+    x = x + L.cross_attention(lp["xattn"], h, (ek, ev), cfg)
+    h = L.apply_norm(cfg.norm, x, lp["ln2"])
+    x = x + L.glu_mlp(lp["mlp"], h, cfg.act)
+    cache = {"k": k, "v": v, "ek": ek, "ev": ev} if want_cache else None
+    return x, cache
+
+
+def forward(cfg, params, frames, tokens):
+    """Teacher-forced decoder logits."""
+    enc_x = encode(cfg, params, frames)
+    x = jnp.take(params["emb"], tokens, axis=0).astype(jnp.bfloat16)
+    x = wsc(x, ("pod", "data"), None, None)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        x, _ = _dec_layer(cfg, lp, x, enc_x, positions)
+        return x, None
+
+    x, _ = scan_blocks(body, x, params["dec_blocks"], unroll=cfg.unroll,
+                       remat=cfg.remat)
+    x = L.apply_norm(cfg.norm, x, params["ln_f"])
+    logits = x @ params["lm_head"]
+    return wsc(logits, ("pod", "data"), None, "model")
+
+
+def loss_fn(cfg, params, batch, aux_weight: float = 0.0):
+    logits = forward(cfg, params, batch["frames"], batch["tokens"])
+    return cross_entropy(logits, batch["labels"])
+
+
+def prefill(cfg, params, frames, tokens, cache_len: Optional[int] = None):
+    enc_x = encode(cfg, params, frames)
+    x = jnp.take(params["emb"], tokens, axis=0).astype(jnp.bfloat16)
+    positions = jnp.arange(tokens.shape[1])
+    cache_len = cache_len or tokens.shape[1]
+
+    def body(x, lp):
+        x, c = _dec_layer(cfg, lp, x, enc_x, positions, want_cache=True)
+        pad = cache_len - c["k"].shape[1]
+        if pad > 0:
+            c["k"] = jnp.pad(c["k"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            c["v"] = jnp.pad(c["v"], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, c
+
+    x, caches = scan_blocks(body, x, params["dec_blocks"],
+                            unroll=cfg.unroll)
+    x = L.apply_norm(cfg.norm, x[:, -1:, :], params["ln_f"])
+    return x @ params["lm_head"], {"dec_blocks": caches}
+
+
+def empty_cache(cfg, B, S_dec, S_enc):
+    hd, kv = cfg.head_dim, cfg.n_kv_heads
+    one = {
+        "k": jnp.zeros((B, S_dec, kv, hd), jnp.bfloat16),
+        "v": jnp.zeros((B, S_dec, kv, hd), jnp.bfloat16),
+        "ek": jnp.zeros((B, S_enc, kv, hd), jnp.bfloat16),
+        "ev": jnp.zeros((B, S_enc, kv, hd), jnp.bfloat16),
+    }
+    return {"dec_blocks": jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.dec_layers,) + a.shape), one)}
+
+
+def decode_step(cfg, params, caches, token, pos):
+    x = jnp.take(params["emb"], token, axis=0).astype(jnp.bfloat16)
+
+    def body(x, inp):
+        lp, cache = inp
+        h = L.apply_norm(cfg.norm, x, lp["ln1"])
+        a, new_sa = L.attention_decode(lp["attn"], h, cfg,
+                                       {"k": cache["k"], "v": cache["v"]},
+                                       pos)
+        x = x + a
+        h = L.apply_norm(cfg.norm, x, lp["ln_x"])
+        B = x.shape[0]
+        q = (h @ lp["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        o = L.decode_attention(q, cache["ek"], cache["ev"],
+                               cache["ek"].shape[1] - 1)
+        x = x + o.reshape(B, 1, -1) @ lp["xattn"]["wo"]
+        h = L.apply_norm(cfg.norm, x, lp["ln2"])
+        x = x + L.glu_mlp(lp["mlp"], h, cfg.act)
+        new = dict(cache)
+        new.update(new_sa)
+        return x, new
+
+    x, new_caches = scan_blocks(
+        body, x, (params["dec_blocks"], caches["dec_blocks"]),
+        unroll=cfg.unroll)
+    x = L.apply_norm(cfg.norm, x, params["ln_f"])
+    return x @ params["lm_head"], {"dec_blocks": new_caches}

@@ -1,0 +1,93 @@
+"""Mesh context + sharding-constraint helpers.
+
+Models call ``wsc(x, spec_elements)`` with *logical* axis names
+("pod", "data", "model"); the helper filters names absent from the active
+mesh (e.g. "pod" on the single-pod mesh) and no-ops when no mesh is set
+(CPU smoke tests).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+BATCH_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+class mesh_context:
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.prev = get_mesh()
+        set_mesh(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_mesh(self.prev)
+
+
+def filter_spec(spec_elements, mesh: Optional[Mesh] = None,
+                shape: Optional[Sequence[int]] = None) -> P:
+    """Drop axis names not in the mesh; drop axes whose dim isn't divisible."""
+    mesh = mesh or _MESH
+    if mesh is None:
+        return P()
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, e in enumerate(spec_elements):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        axes = tuple(a for a in axes if a in names)
+        if shape is not None and axes:
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            if shape[i] % total != 0:
+                # try dropping trailing axes until divisible
+                while axes:
+                    total = 1
+                    for a in axes:
+                        total *= sizes[a]
+                    if shape[i] % total == 0:
+                        break
+                    axes = axes[:-1]
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def wsc(x, *spec_elements):
+    """with_sharding_constraint against the context mesh (no-op without)."""
+    mesh = _MESH
+    if mesh is None:
+        return x
+    spec = filter_spec(spec_elements, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named(spec_elements, shape=None, mesh=None) -> NamedSharding:
+    mesh = mesh or _MESH
+    return NamedSharding(mesh, filter_spec(spec_elements, mesh, shape))

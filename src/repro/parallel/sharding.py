@@ -1,0 +1,106 @@
+"""Parameter / activation / cache sharding rules.
+
+FSDP over the "data" axis + tensor parallelism over the "model" axis,
+pure data parallelism over the "pod" axis. Rules are path-based over the
+parameter pytree; non-divisible dimensions gracefully fall back to
+replication (handled by ``filter_spec``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.parallel.api import filter_spec
+
+# trailing-dims rules keyed by leaf name ---------------------------------
+_COL = ("data", "model")          # (D, X): FSDP rows, TP cols
+_ROW = ("model", "data")          # (X, D)
+_RULES = {
+    "emb": ("model", "data"),
+    "lm_head": _COL,
+    "wq": _COL, "wk": _COL, "wv": _COL, "w1": _COL, "w3": _COL,
+    "in_proj": _COL, "router": ("data", None),
+    "wo": _ROW, "w2": _ROW, "out_proj": _ROW,
+    "conv_w": ("model", None),
+}
+_MOE_RULES = {  # expert-parallel: experts over "model"
+    "w1": ("model", "data", None),
+    "w3": ("model", "data", None),
+    "w2": ("model", None, "data"),
+}
+
+
+def _path_names(path):
+    names = []
+    for k in path:
+        if isinstance(k, DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            names.append(str(k.idx))
+    return names
+
+
+def spec_for_leaf(path, leaf) -> P:
+    names = _path_names(path)
+    leaf_name = names[-1] if names else ""
+    in_moe = "moe" in names and "shared" not in names
+    rules = _MOE_RULES if in_moe and leaf_name in _MOE_RULES else _RULES
+    rule = rules.get(leaf_name)
+    if rule is None or leaf.ndim < len(rule):
+        return tuple([None] * leaf.ndim)
+    pad = leaf.ndim - len(rule)
+    return tuple([None] * pad + list(rule))
+
+
+def param_specs(params_shape: Any, mesh) -> Any:
+    """Map a pytree of ShapeDtypeStructs/arrays -> NamedSharding tree."""
+    def f(path, leaf):
+        spec = spec_for_leaf(path, leaf)
+        return NamedSharding(mesh, filter_spec(spec, mesh, leaf.shape))
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def cache_spec_for_leaf(path, leaf, mesh) -> NamedSharding:
+    """KV / SSM cache shardings for decode.
+
+    attn caches: (..., B, S, Hkv, hd) -> batch over (pod, data) when divisible,
+    else sequence over data; heads over model when divisible, else head_dim.
+    ssm caches:  conv (..., B, K-1, C) / ssm (..., B, H, Pd, N) -> batch over
+    (pod, data), channel/head dims over model.
+    """
+    names = _path_names(path)
+    leaf_name = names[-1] if names else ""
+    nd = leaf.ndim
+    if leaf_name in ("k", "v"):           # (..., B, S, Hkv, hd)
+        B, S, Hkv, hd = leaf.shape[-4:]
+        batch_total = mesh.devices.size // (
+            dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1))
+        spec = [None] * (nd - 4)
+        if B % batch_total == 0 and B > 1:
+            spec += [("pod", "data"), None]
+        else:
+            spec += [None, "data"]
+        spec += ["model", None] if Hkv % _axis(mesh, "model") == 0 \
+            else [None, "model"]
+        return NamedSharding(mesh, filter_spec(spec, mesh, leaf.shape))
+    if leaf_name == "conv":               # (..., B, K-1, C)
+        spec = [None] * (nd - 3) + [("pod", "data"), None, "model"]
+        return NamedSharding(mesh, filter_spec(spec, mesh, leaf.shape))
+    if leaf_name == "ssm":                # (..., B, H, Pd, N)
+        spec = [None] * (nd - 4) + [("pod", "data"), "model", None, None]
+        return NamedSharding(mesh, filter_spec(spec, mesh, leaf.shape))
+    return NamedSharding(mesh, P())
+
+
+def _axis(mesh, name) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get(name, 1)
+
+
+def cache_specs(cache_shape: Any, mesh) -> Any:
+    def f(path, leaf):
+        return cache_spec_for_leaf(path, leaf, mesh)
+    return jax.tree_util.tree_map_with_path(f, cache_shape)

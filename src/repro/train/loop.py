@@ -1,0 +1,188 @@
+"""Fault-tolerant training loop.
+
+Features needed at pod scale, all exercised by the examples/tests:
+- resumable: restores the latest checkpoint (params + optimizer + step)
+  and the stateless data pipeline regenerates batch(step) exactly;
+- async checkpointing every `ckpt_every` steps, retention-managed;
+- preemption handling: SIGTERM/SIGINT triggers a final blocking save;
+- straggler watchdog: a step slower than `straggler_factor` x the running
+  median is logged (at pod scale this feeds the controller that triggers
+  re-sharding away from a slow host -- here we surface the signal);
+- optional int8 gradient compression for the DP all-reduce (error feedback
+  kept in the optimizer state is unnecessary at int8 for these scales --
+  documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import statistics
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models import model as M
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    grad_compression: Optional[str] = None     # None | "int8"
+    microbatches: int = 1                      # grad accumulation
+
+
+def quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads):
+    """Simulated compressed DP collective: values that cross the wire are
+    int8 + one f32 scale per leaf. Under pjit the all-reduce happens on the
+    quantized representatives; numerically this applies the same
+    quantize->sum->dequantize transfer function."""
+    def f(g):
+        q, s = quantize_int8(g.astype(jnp.float32))
+        return dequantize_int8(q, s).astype(g.dtype)
+    return jax.tree.map(f, grads)
+
+
+def make_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
+              train_cfg: TrainConfig):
+    def loss_of(params, batch):
+        return M.loss_fn(cfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if train_cfg.microbatches > 1:
+            mb = train_cfg.microbatches
+            B = batch["tokens"].shape[0]
+            assert B % mb == 0
+            split = {k: v.reshape(mb, B // mb, *v.shape[1:])
+                     for k, v in batch.items()}
+
+            def acc_fn(carry, mbatch):
+                loss, grads = jax.value_and_grad(loss_of)(params, mbatch)
+                return (carry[0] + loss,
+                        jax.tree.map(jnp.add, carry[1], grads)), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if getattr(cfg, "unroll", False):
+                # loop-free for the dry-run's cost accounting
+                carry = (jnp.zeros(()), zero)
+                for i in range(mb):
+                    carry, _ = acc_fn(carry, jax.tree.map(
+                        lambda v: v[i], split))
+                loss, grads = carry
+            else:
+                (loss, grads), _ = jax.lax.scan(
+                    acc_fn, (jnp.zeros(()), zero), split)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        if train_cfg.grad_compression == "int8":
+            grads = compress_grads(grads)
+        params, opt_state, stats = adamw.update(opt_cfg, grads, opt_state,
+                                                params)
+        return params, opt_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, data_cfg: DataConfig,
+                 opt_cfg: adamw.OptConfig = None,
+                 train_cfg: TrainConfig = None, seed: int = 0,
+                 extra_batch: Optional[Callable[[int], Dict]] = None):
+        self.cfg = cfg
+        self.train_cfg = train_cfg or TrainConfig()
+        self.opt_cfg = opt_cfg or adamw.OptConfig(
+            total_steps=self.train_cfg.steps)
+        self.data = SyntheticLM(data_cfg)
+        self.ckpt = CheckpointManager(self.train_cfg.ckpt_dir)
+        self.extra_batch = extra_batch
+
+        key = jax.random.PRNGKey(seed)
+        self.params = M.init_params(cfg, key)
+        self.opt_state = adamw.init(self.params)
+        self.start_step = 0
+        self._preempted = False
+
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state = self.ckpt.restore(
+                latest, {"params": self.params, "opt": self.opt_state})
+            self.params, self.opt_state = state["params"], state["opt"]
+            self.start_step = latest
+            print(f"[trainer] resumed from step {latest}")
+
+        self.step_fn = jax.jit(make_step(cfg, self.opt_cfg, self.train_cfg),
+                               donate_argnums=(0, 1))
+
+    def _handle_preempt(self, signum, frame):
+        print(f"[trainer] signal {signum}: checkpoint + stop")
+        self._preempted = True
+
+    def run(self) -> Dict[str, Any]:
+        tc = self.train_cfg
+        old1 = signal.signal(signal.SIGTERM, self._handle_preempt)
+        old2 = signal.signal(signal.SIGINT, self._handle_preempt)
+        losses = []
+        step_times = []
+        stragglers = 0
+        try:
+            for step in range(self.start_step, tc.steps):
+                t0 = time.time()
+                batch = self.data.jax_batch(
+                    step, self.extra_batch(step) if self.extra_batch
+                    else None)
+                self.params, self.opt_state, stats = self.step_fn(
+                    self.params, self.opt_state, batch)
+                loss = float(stats["loss"])
+                dt = time.time() - t0
+                step_times.append(dt)
+                losses.append(loss)
+                if len(step_times) >= 8:
+                    med = statistics.median(step_times[-32:])
+                    if dt > tc.straggler_factor * med:
+                        stragglers += 1
+                        print(f"[watchdog] step {step} took {dt:.2f}s "
+                              f"(median {med:.2f}s) -- straggler")
+                if step % tc.log_every == 0:
+                    print(f"[train] step={step} loss={loss:.4f} "
+                          f"lr={float(stats['lr']):.2e} "
+                          f"gnorm={float(stats['grad_norm']):.3f} "
+                          f"dt={dt:.2f}s", flush=True)
+                if (step + 1) % tc.ckpt_every == 0 or self._preempted:
+                    self.ckpt.save(step + 1, {"params": self.params,
+                                              "opt": self.opt_state})
+                if self._preempted:
+                    break
+        finally:
+            self.ckpt.save(min(tc.steps, self.start_step + len(losses)),
+                           {"params": self.params, "opt": self.opt_state},
+                           blocking=True)
+            signal.signal(signal.SIGTERM, old1)
+            signal.signal(signal.SIGINT, old2)
+        return {"losses": losses, "step_times": step_times,
+                "stragglers": stragglers,
+                "final_step": self.start_step + len(losses)}

@@ -1,0 +1,153 @@
+"""Per-arch smoke tests + model-level correctness invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config, list_archs
+from repro.models import layers as L, model as M
+from repro.optim import adamw
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)), jnp.bfloat16)
+    if cfg.n_vision_tokens:
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_vision_tokens, cfg.d_model)),
+            jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced config of the same family: one forward + one train step on
+    CPU, asserting output shapes and no NaNs (assignment requirement)."""
+    cfg = get_config(arch).smoke_model()
+    params = M.init_params(cfg, KEY)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    loss = M.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+
+    opt = adamw.init(params)
+    from repro.launch.steps import make_train_step
+    p2, o2, stats = jax.jit(make_train_step(cfg))(params, opt, batch)
+    assert np.isfinite(float(stats["loss"]))
+    assert int(o2["step"]) == 1
+    # params actually changed
+    d0 = jax.tree.leaves(params)[0]
+    d1 = jax.tree.leaves(p2)[0]
+    assert not np.allclose(np.asarray(d0, np.float32),
+                           np.asarray(d1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-2.7b",
+                                  "jamba-v0.1-52b", "deepseek-moe-16b",
+                                  "seamless-m4t-medium"])
+def test_prefill_decode_matches_forward(arch):
+    """Teacher-forcing consistency: decode at position t after prefill of
+    t tokens must reproduce the full forward's logits at position t."""
+    import dataclasses
+    cfg = get_config(arch).smoke_model()
+    if cfg.n_experts:
+        # capacity-based MoE drops tokens differently between the full
+        # teacher-forced pass and stepwise decode; disable dropping here
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)
+    params = M.init_params(cfg, KEY)
+    B, S = 2, 24
+    batch = _batch(cfg, B, S)
+    if cfg.family == "encdec":
+        from repro.models import seq2seq
+        full, _ = seq2seq.forward(cfg, params, batch["frames"],
+                                  batch["tokens"]), None
+        full = seq2seq.forward(cfg, params, batch["frames"],
+                               batch["tokens"])
+    else:
+        from repro.models import lm
+        full, _ = lm.forward(cfg, params, batch["tokens"],
+                             batch.get("patches"))
+
+    t = S - 8
+    pre = {k: (v[:, :t] if k in ("tokens", "labels") else v)
+           for k, v in batch.items()}
+    if cfg.family == "encdec":
+        pre["frames"] = batch["frames"]  # encoder sees the whole input
+    logits_t, caches = M.prefill_fn(cfg, params, pre, cache_len=S)
+    np.testing.assert_allclose(
+        np.asarray(logits_t[:, 0], np.float32),
+        np.asarray(full[:, t - 1], np.float32), rtol=0.06, atol=0.15)
+
+    # decode the next few tokens teacher-forced and compare
+    for i in range(3):
+        tok = batch["tokens"][:, t + i:t + i + 1]
+        logits, caches = M.decode_fn(cfg, params, caches, tok,
+                                     jnp.int32(t + i))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(full[:, t + i], np.float32), rtol=0.06, atol=0.15)
+
+
+def test_ssd_chunked_equals_sequential():
+    b, l, h, p, g, n = 2, 64, 4, 16, 1, 8
+    k = jax.random.split(KEY, 5)
+    x = jax.random.normal(k[0], (b, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(k[1], (b, l, h)))
+    A = -jnp.exp(jax.random.normal(k[2], (h,)) * 0.3)
+    Bm = jax.random.normal(k[3], (b, l, g, n), jnp.float32)
+    Cm = jax.random.normal(k[4], (b, l, g, n), jnp.float32)
+    y1, s1 = L.ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    y2, s2 = L.ssd_sequential(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_jnp_attention_vs_dense():
+    B, S, Hq, Hkv, hd = 2, 64, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+    o1 = L.gqa_attention(q, k, v, causal=True, block=16)
+    from repro.kernels.ref import flash_attention_ref
+    o2 = flash_attention_ref(q.transpose(0, 2, 1, 3),
+                             k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=True)
+    np.testing.assert_allclose(np.asarray(o1),
+                               np.asarray(o2.transpose(0, 2, 1, 3)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_and_gates():
+    cfg = get_config("deepseek-moe-16b").smoke_model()
+    p = L.init_moe(jax.random.PRNGKey(1), cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.bfloat16)
+    y, aux = L.moe_ffn(p, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    assert float(aux) > 0.0
+
+
+def test_scan_vs_unroll_forward_identical():
+    import dataclasses
+    cfg = get_config("qwen2.5-3b").smoke_model()
+    params = M.init_params(cfg, KEY)
+    batch = _batch(cfg, 2, 32)
+    from repro.models import lm
+    l1, _ = lm.forward(cfg, params, batch["tokens"])
+    cfg2 = dataclasses.replace(cfg, unroll=True)
+    l2, _ = lm.forward(cfg2, params, batch["tokens"])
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,113 @@
+"""Routing invariants: acyclic CDG, routability, VC balance, faults."""
+import numpy as np
+import pytest
+
+from repro.core import fault as F, netsim as NS, routing as R, \
+    topology as T, vcalloc as V
+
+
+@pytest.fixture(scope="module")
+def pt128():
+    return T.pt((4, 4, 8))
+
+
+@pytest.fixture(scope="module")
+def at128(pt128):
+    return R.allowed_turns(pt128, n_vc=2, priority="apl", robust=True)
+
+
+@pytest.fixture(scope="module")
+def routed128(at128):
+    return R.select_paths(at128, K=4, local_search_rounds=2)
+
+
+def _is_dag(at):
+    """Kahn's algorithm over the allowed-turn CDG."""
+    from collections import defaultdict, deque
+    nodes = set()
+    adj = defaultdict(list)
+    indeg = defaultdict(int)
+    for (a, b) in at.allowed:
+        nodes.add(a)
+        nodes.add(b)
+        adj[a].append(b)
+        indeg[b] += 1
+    q = deque([x for x in nodes if indeg[x] == 0])
+    seen = 0
+    while q:
+        x = q.popleft()
+        seen += 1
+        for y in adj[x]:
+            indeg[y] -= 1
+            if indeg[y] == 0:
+                q.append(y)
+    return seen == len(nodes)
+
+
+def test_cdg_acyclic(at128):
+    assert _is_dag(at128)
+
+
+def test_all_pairs_routable(routed128, pt128):
+    assert routed128.unreachable == 0
+    assert len(routed128.paths) == pt128.n * (pt128.n - 1)
+
+
+def test_paths_are_connected_channel_sequences(routed128, at128):
+    ch = at128.channels
+    for (s, d), p in list(routed128.paths.items())[::97]:
+        assert int(ch.src[p[0]]) == s
+        assert int(ch.dst[p[-1]]) == d
+        for a, b in zip(p[:-1], p[1:]):
+            assert int(ch.dst[a]) == int(ch.src[b])
+
+
+def test_vc_allocation_valid_and_balanced(at128, routed128):
+    vcs, counts = V.allocate_vcs(at128, routed128.paths, balance=True)
+    assert V.verify_deadlock_free(at128, routed128.paths, vcs)
+    ratio = counts.max() / max(counts.min(), 1)
+    assert ratio < 1.2, f"VC imbalance {counts}"
+    _, unbal = V.allocate_vcs(at128, routed128.paths, balance=False)
+    assert unbal[0] > unbal[1], "naive policy should bias VC0"
+
+
+def test_routed_lmax_near_mcf_bound(routed128):
+    # MCF(PT 4x4x8) = 1/128 -> ordered-pair completion bound = 128
+    assert routed128.l_max <= 128 * 1.15
+
+
+def test_dor_paths_minimal_on_torus(pt128):
+    paths, vcs = NS.dor_paths(pt128)
+    d = T.bfs_all_pairs(pt128)
+    for (s, dd), p in list(paths.items())[::211]:
+        assert len(p) == int(d[s, dd])
+
+
+def test_robust_at_survives_every_fault():
+    topo = T.pt((4, 4, 8))
+    at = R.allowed_turns(topo, n_vc=2, priority="random", robust=True)
+    assert len(at.trees) == 2
+    colors = F.colors_in_use(topo)
+    # spot-check 6 fault scenarios for full reachability
+    for color in colors[::8]:
+        dead = F.dead_channels_for_color(at, color)
+        routed = R.select_paths(at, K=2, local_search_rounds=0,
+                                dead_channels=dead)
+        assert routed.unreachable == 0, f"color {color} broke reachability"
+
+
+def test_incremental_dag_rejects_cycles():
+    dag = R.IncrementalDAG(4)
+    assert dag.try_add(0, 1)
+    assert dag.try_add(1, 2)
+    assert dag.try_add(2, 3)
+    assert not dag.try_add(3, 0)
+    assert not dag.try_add(2, 0)
+    assert dag.try_add(0, 3)
+
+
+def test_netsim_conservation(pt128):
+    tab = NS.dor_tables(pt128)
+    r = NS.run(tab, 0.05, cycles=1500, warmup=500)
+    assert r["delivered"] <= r["offered"] + 1e-9
+    assert r["delivered"] > 0.8 * r["offered"]

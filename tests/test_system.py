@@ -1,0 +1,142 @@
+"""End-to-end behaviour tests for the paper's system."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import cells, get_config, list_archs
+from repro.core import collectives as C, netsim as NS, routing as R, \
+    topology as T
+from repro.data.synthetic import DataConfig
+from repro.optim.adamw import OptConfig
+from repro.train.loop import TrainConfig, Trainer
+
+
+def test_cells_cover_assignment():
+    all_cells = cells(include_skipped=True)
+    assert len(all_cells) == 40
+    runnable = [c for c in all_cells if c[2]]
+    assert len(runnable) == 32
+    # long_500k only for sub-quadratic archs
+    for a, s, ok in all_cells:
+        if s == "long_500k":
+            assert ok == (a in ("mamba2-2.7b", "jamba-v0.1-52b"))
+
+
+def test_training_loss_decreases_and_resumes():
+    cfg = get_config("qwen2.5-3b").smoke_model()
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(steps=10, ckpt_every=5, ckpt_dir=d, log_every=100)
+        tr = Trainer(cfg, DataConfig(vocab=cfg.vocab, seq_len=32,
+                                     global_batch=4),
+                     OptConfig(lr=1e-3, warmup_steps=2, total_steps=10), tc)
+        out = tr.run()
+        assert out["losses"][-1] < out["losses"][0]
+        # resume continues from the saved step
+        tc2 = TrainConfig(steps=14, ckpt_every=5, ckpt_dir=d, log_every=100)
+        tr2 = Trainer(cfg, DataConfig(vocab=cfg.vocab, seq_len=32,
+                                      global_batch=4),
+                      OptConfig(lr=1e-3, warmup_steps=2, total_steps=14),
+                      tc2)
+        assert tr2.start_step == 10
+        out2 = tr2.run()
+        assert out2["final_step"] == 14
+
+
+def test_grad_compression_trains():
+    cfg = get_config("qwen2.5-3b").smoke_model()
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(steps=6, ckpt_every=100, ckpt_dir=d,
+                         log_every=100, grad_compression="int8")
+        tr = Trainer(cfg, DataConfig(vocab=cfg.vocab, seq_len=32,
+                                     global_batch=4),
+                     OptConfig(lr=1e-3, warmup_steps=2, total_steps=6), tc)
+        out = tr.run()
+        assert out["losses"][-1] < out["losses"][0]
+
+
+def test_microbatched_grad_accumulation_matches_full():
+    from repro.models import model as M
+    from repro.optim import adamw
+    from repro.train.loop import make_step
+    cfg = get_config("qwen2.5-3b").smoke_model()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)),
+                                   jnp.int32)}
+    oc = OptConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    s1 = make_step(cfg, oc, TrainConfig(microbatches=1))
+    s2 = make_step(cfg, oc, TrainConfig(microbatches=2))
+    _, _, a = s1(params, opt, batch)
+    _, _, b = s2(params, opt, batch)
+    assert abs(float(a["loss"]) - float(b["loss"])) < 0.02
+
+
+def test_serving_batched_requests():
+    from repro.launch.serve import Request, Server
+    from repro.models import model as M
+    cfg = get_config("qwen2.5-3b").smoke_model()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    server = Server(cfg, params, n_slots=2, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab, 8), 4) for i in range(3)]
+    out = server.run(reqs)
+    assert out["served"] == 3
+    assert all(len(v) >= 4 for v in out["results"].values())
+
+
+def test_collective_schedules_sane():
+    topo = T.pt((4, 4, 8))
+    at = R.allowed_turns(topo, n_vc=2, priority="random")
+    routed = R.select_paths(at, K=2, local_search_rounds=0)
+    rep = C.collective_report(topo, routed, mcf_lambda=0.0078125)
+    for kind, r in rep.items():
+        assert 0 < r["utilization"] <= 1.0 + 1e-9, kind
+    # all-gather/all-reduce near-ideal on tori (paper Fig. 6)
+    assert rep["all-gather"]["utilization"] > 0.5
+    # a2a cannot beat its MCF limit
+    assert rep["all-to-all"]["epochs"] >= 1 / 0.0078125 * 0.95
+
+
+def test_roofline_terms_formulas():
+    from repro.launch.hlo_analysis import model_flops, roofline_terms
+    t = roofline_terms(1e12, 1e11, 1e9, 256)
+    assert t["t_compute"] == pytest.approx(1e12 / 197e12)
+    assert t["t_memory"] == pytest.approx(1e11 / 819e9)
+    assert t["t_collective"] == pytest.approx(1e9 / (50e9 * 6))
+    assert t["dominant"] == "t_memory"
+    assert model_flops(1e9, 1e6, "train") == pytest.approx(6e15)
+
+
+def test_hlo_collective_parser():
+    from repro.launch.hlo_analysis import collective_stats
+    txt = (
+        "%all-reduce = f32[32,256]{1,0} all-reduce(%dot), channel_id=1, "
+        "replica_groups=[8,16]<=[8,16]T(1,0), use_global_device_ids=true\n"
+        "%ag = bf16[64,64]{1,0} all-gather(%p), channel_id=2, "
+        "replica_groups={{0,1,2,3}}, dimensions={0}\n"
+        "ROOT %fusion = f32[2]{0} fusion(%all-reduce), kind=kLoop\n")
+    s = collective_stats(txt)
+    assert s["all-reduce"]["count"] == 1
+    assert s["all-reduce"]["operand_bytes"] == 32 * 256 * 4
+    g = 16
+    assert s["all-reduce"]["wire_bytes"] == pytest.approx(
+        2 * 32 * 256 * 4 * (g - 1) / g)
+    assert s["all-gather"]["count"] == 1
+    assert s["all-gather"]["operand_bytes"] == pytest.approx(
+        64 * 64 * 2 / 4)
+
+
+def test_fault_certificate_math():
+    from repro.core.fault import fault_tolerance_certificate
+    topo = T.pt((4, 4, 8))
+    cert = fault_tolerance_certificate(topo, 0.0078125, f=1)
+    assert cert["satisfies_c8"]
+    assert cert["t_max"] == min(int(32 * 128 * 0.0078125), 48)
