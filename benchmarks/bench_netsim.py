@@ -1,0 +1,264 @@
+"""Netsim perf tracking: batched sweep vs the seed's sequential sweep.
+
+Measures, on a 4x4x4 pod (one cube, 64 chips, PT wiring + DOR routing):
+
+- wall-clock of the *seed's* sequential `saturation_point` (its original
+  4-array kernel, vendored below as a frozen baseline; one jit call per
+  rate with early exit) vs the current batched two-stage sweep, plus the
+  current kernel driven sequentially, and the speedups;
+- saturation points for the built-in traffic patterns (uniform,
+  transpose, hotspot, demand-derived), all through the same jitted kernel.
+
+``--json`` (or ``main(json_path=...)``) writes BENCH_netsim.json so the
+perf trajectory is tracked from PR to PR.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from functools import partial
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from benchmarks.common import emit
+
+SPEC = (4, 4, 4)
+
+
+# ---------------------------------------------------------------------------
+# Frozen copy of the seed's simulator kernel (PR-0 netsim._simulate) used
+# as the perf baseline. Do not modernise: its job is to stay fixed.
+# ---------------------------------------------------------------------------
+
+
+def _seed_simulate_factory():
+    import jax
+    import jax.numpy as jnp
+
+    @partial(jax.jit, static_argnames=("n", "n_ch", "n_vc", "slots",
+                                       "cycles", "flits"))
+    def _simulate(ch_dst, path, vcs, rate, key, *, n, n_ch, n_vc, slots,
+                  cycles, warmup, flits=1):
+        NQ = n_ch * n_vc
+        q_src = jnp.zeros((NQ, slots), jnp.int32)
+        q_dst = jnp.zeros((NQ, slots), jnp.int32)
+        q_hop = jnp.zeros((NQ, slots), jnp.int32)
+        head = jnp.zeros((NQ,), jnp.int32)
+        size = jnp.zeros((NQ,), jnp.int32)
+        rr = jnp.zeros((n_ch,), jnp.int32)
+        busy = jnp.zeros((n_ch,), jnp.int32)
+
+        def qid(c, v):
+            return c * n_vc + v
+
+        def cycle(i, carry):
+            (q_src, q_dst, q_hop, head, size, rr, busy, key, stats) = carry
+            offered, accepted, delivered = stats
+            hs = q_src[jnp.arange(NQ), head]
+            hd = q_dst[jnp.arange(NQ), head]
+            hh = q_hop[jnp.arange(NQ), head]
+            nonempty = size > 0
+            arrive_node = ch_dst[jnp.arange(NQ) // n_vc]
+            consume = nonempty & (arrive_node == hd)
+            nxt_c = path[hs, hd, hh + 1]
+            nxt_v = vcs[hs, hd, hh + 1].astype(jnp.int32)
+            tq = jnp.where(consume, -1, qid(nxt_c, nxt_v))
+            fwd_ok = nonempty & ~consume & (size[jnp.clip(tq, 0, NQ - 1)]
+                                            < slots)
+            eligible = consume | fwd_ok
+            eligible = eligible & jnp.repeat(busy == 0, n_vc)
+            elig_cv = eligible.reshape(n_ch, n_vc)
+            offs = (rr[:, None] + jnp.arange(n_vc)[None, :]) % n_vc
+            pri = jnp.take_along_axis(elig_cv, offs, axis=1)
+            first = jnp.argmax(pri, axis=1)
+            any_e = pri.any(axis=1)
+            win_v = (rr + first) % n_vc
+            win_q = jnp.arange(n_ch) * n_vc + win_v
+            win_valid = any_e
+            rr = jnp.where(win_valid, (win_v + 1) % n_vc, rr)
+            w_src = hs[win_q]
+            w_dst = hd[win_q]
+            w_hop = hh[win_q]
+            w_consume = consume[win_q] & win_valid
+            w_target = jnp.where(win_valid & ~w_consume, tq[win_q], -1)
+            sort_i = jnp.argsort(jnp.where(w_target < 0, NQ + 1, w_target))
+            st = jnp.where(w_target < 0, NQ + 1, w_target)[sort_i]
+            newgrp = jnp.concatenate([jnp.ones(1, bool), st[1:] != st[:-1]])
+            grp_start = jnp.where(newgrp, jnp.arange(n_ch), 0)
+            grp_start = jax.lax.associative_scan(jnp.maximum, grp_start)
+            rank_sorted = jnp.arange(n_ch) - grp_start
+            rank = jnp.zeros(n_ch, jnp.int32).at[sort_i].set(
+                rank_sorted.astype(jnp.int32))
+            space_ok = (size[jnp.clip(w_target, 0, NQ - 1)] + rank) < slots
+            w_push = win_valid & ~w_consume & (w_target >= 0) & space_ok
+            w_pop = w_consume | w_push
+            busy = jnp.where(w_pop, flits - 1, jnp.maximum(busy - 1, 0))
+            popq = jnp.where(w_pop, win_q, NQ)
+            head = head.at[jnp.clip(popq, 0, NQ - 1)].add(
+                jnp.where(w_pop, 1, 0)) % slots
+            size = size.at[jnp.clip(popq, 0, NQ - 1)].add(
+                jnp.where(w_pop, -1, 0))
+            tgt = jnp.clip(w_target, 0, NQ - 1)
+            slot = (head[tgt] + size[tgt] + rank) % slots
+            q_src = q_src.at[tgt, slot].set(
+                jnp.where(w_push, w_src, q_src[tgt, slot]))
+            q_dst = q_dst.at[tgt, slot].set(
+                jnp.where(w_push, w_dst, q_dst[tgt, slot]))
+            q_hop = q_hop.at[tgt, slot].set(
+                jnp.where(w_push, w_hop + 1, q_hop[tgt, slot]))
+            size = size.at[tgt].add(jnp.where(w_push, 1, 0))
+            key, k1, k2 = jax.random.split(key, 3)
+            want = jax.random.uniform(k1, (n,)) < rate
+            dsts = jax.random.randint(k2, (n,), 0, n - 1)
+            srcs = jnp.arange(n)
+            dsts = jnp.where(dsts >= srcs, dsts + 1, dsts)
+            c0 = path[srcs, dsts, 0]
+            v0 = vcs[srcs, dsts, 0].astype(jnp.int32)
+            iq = qid(c0, v0)
+            has_space = size[iq] < slots
+            inj = want & has_space
+            slot = (head[iq] + size[iq]) % slots
+            q_src = q_src.at[iq, slot].set(
+                jnp.where(inj, srcs, q_src[iq, slot]))
+            q_dst = q_dst.at[iq, slot].set(
+                jnp.where(inj, dsts, q_dst[iq, slot]))
+            q_hop = q_hop.at[iq, slot].set(
+                jnp.where(inj, 0, q_hop[iq, slot]))
+            size = size.at[iq].add(jnp.where(inj, 1, 0))
+            measure = i >= warmup
+            offered = offered + jnp.where(measure, want.sum(), 0)
+            accepted = accepted + jnp.where(measure, inj.sum(), 0)
+            delivered = delivered + jnp.where(measure, w_consume.sum(), 0)
+            return (q_src, q_dst, q_hop, head, size, rr, busy, key,
+                    (offered, accepted, delivered))
+
+        stats0 = (jnp.zeros((), jnp.int32),) * 3
+        carry = (q_src, q_dst, q_hop, head, size, rr, busy, key, stats0)
+        carry = jax.lax.fori_loop(0, cycles, cycle, carry)
+        offered, accepted, delivered = carry[-1]
+        return offered, accepted, delivered
+
+    return _simulate
+
+
+def _seed_sequential_saturation(tab, step, max_rate, cycles, warmup,
+                                slots=128, flits=4, deficit=0.05):
+    """The seed's `saturation_point`: python loop of per-rate jit calls on
+    the frozen seed kernel, early exit at the first deficit."""
+    import jax
+    import jax.numpy as jnp
+
+    sim = _seed_simulate_factory()
+    meas = cycles - warmup
+    sat, trace, rate = 0.0, [], step
+    with jax.experimental.disable_x64():
+        while rate <= max_rate + 1e-9:
+            off, acc, dlv = sim(
+                jnp.asarray(tab.ch_dst), jnp.asarray(tab.path),
+                jnp.asarray(tab.vcs), jnp.float32(rate),
+                jax.random.PRNGKey(0), n=tab.n, n_ch=tab.n_ch,
+                n_vc=tab.n_vc, slots=slots, cycles=cycles, warmup=warmup,
+                flits=flits)
+            r = {"offered": float(off) / meas / tab.n,
+                 "delivered": float(dlv) / meas / tab.n, "rate": rate}
+            trace.append(r)
+            if r["delivered"] >= (1 - deficit) * r["offered"]:
+                sat = r["delivered"]
+            else:
+                break
+            rate += step
+    return sat, trace
+
+
+def main(full: bool = False, json_path=None) -> dict:
+    import numpy as np
+
+    from repro.core import netsim as NS, topology as T
+    from repro.core.demand import WorkloadDemand
+    from repro.core.traffic import TrafficPattern
+
+    step = 0.02 if not full else 0.01
+    cycles = 2500 if not full else 6000
+    warmup = 800 if not full else 2000
+    topo = T.pt(SPEC)
+    tab = NS.dor_tables(topo)
+    n = topo.n
+    uniform = TrafficPattern.uniform(n)
+
+    # warm every jit cache so the timings measure execution, not compile
+    _seed_sequential_saturation(tab, 0.3, 0.3, cycles, warmup)
+    NS.run(tab, step, traffic=uniform, cycles=cycles, warmup=warmup)
+    NS.saturation_point(tab, step=step, cycles=cycles, warmup=warmup,
+                        traffic=uniform)
+
+    t0 = time.time()
+    sat_seed, trace_seed = _seed_sequential_saturation(
+        tab, step, 1.0, cycles, warmup)
+    t_seed = time.time() - t0
+
+    t0 = time.time()
+    ct = uniform.compiled()
+    sat_seq, rate = 0.0, step
+    n_seq = 0
+    while rate <= 1.0 + 1e-9:
+        r = NS.run(tab, rate, traffic=ct, cycles=cycles, warmup=warmup)
+        n_seq += 1
+        if r["delivered"] >= 0.95 * r["offered"]:
+            sat_seq = r["delivered"]
+        else:
+            break
+        rate += step
+    t_seq = time.time() - t0
+
+    t0 = time.time()
+    sat_batch, _ = NS.saturation_point(tab, step=step, cycles=cycles,
+                                       warmup=warmup, traffic=uniform)
+    t_batch = time.time() - t0
+
+    speedup = t_seed / max(t_batch, 1e-9)
+    print(f"  sweep wall-clock: seed-sequential({len(trace_seed)} rates)="
+          f"{t_seed:.2f}s  current-sequential({n_seq} rates)={t_seq:.2f}s"
+          f"  batched={t_batch:.2f}s -> {speedup:.1f}x vs seed")
+    emit("bench_netsim_sweep_speedup", t_batch * 1e6, f"{speedup:.2f}x")
+
+    wd = WorkloadDemand(topo.pod, w_same_cube=2.0, w_ring=2.0,
+                        w_uniform=0.25)
+    patterns = [uniform, TrafficPattern.transpose(topo.pod),
+                TrafficPattern.hotspot(n, list(range(4)), 0.4),
+                TrafficPattern.from_demand(wd)]
+    sats = {}
+    for pat in patterns:
+        sat, _ = NS.saturation_point(tab, step=step, cycles=cycles,
+                                     warmup=warmup, traffic=pat)
+        sats[pat.name] = sat
+        print(f"  saturation[{pat.name:10s}] = {sat:.4f}")
+    emit("bench_netsim_uniform_sat", 0, f"{sats['uniform']:.4f}")
+
+    result = {
+        "pod": list(SPEC),
+        "rate_step": step,
+        "cycles": cycles,
+        "sweep_seed_sequential_s": round(t_seed, 4),
+        "sweep_current_sequential_s": round(t_seq, 4),
+        "sweep_batched_s": round(t_batch, 4),
+        "sweep_speedup_vs_seed": round(speedup, 2),
+        "saturation_uniform_seed_kernel": round(sat_seed, 5),
+        "saturation": {k: round(v, 5) for k, v in sats.items()},
+    }
+    if json_path:
+        Path(json_path).write_text(json.dumps(result, indent=2) + "\n")
+        print(f"  wrote {json_path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    main(args.full,
+         json_path=Path(__file__).parent.parent / "BENCH_netsim.json"
+         if args.json else None)

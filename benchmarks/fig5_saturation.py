@@ -1,4 +1,9 @@
-"""Fig. 5: uniform-random saturation points, normalized to best PT+DOR."""
+"""Fig. 5: uniform-random saturation points, normalized to best PT+DOR.
+
+The injection-rate sweep runs as batched (lane-flattened) device
+executions (`netsim.saturation_point`); pass ``traffic=`` for
+non-uniform patterns.
+"""
 from __future__ import annotations
 
 import argparse
@@ -9,7 +14,7 @@ from benchmarks.common import emit, load_tons, timed
 
 
 def saturation(topo, mode: str, step=0.02, cycles=3000, warmup=1000,
-               seed=0):
+               seed=0, traffic=None):
     from repro.core import netsim as NS, routing as R
     if mode == "dor":
         tab = NS.dor_tables(topo)          # 2 escape VCs (datelines)
@@ -20,7 +25,7 @@ def saturation(topo, mode: str, step=0.02, cycles=3000, warmup=1000,
         routed = R.select_paths(at, K=4, local_search_rounds=3, seed=seed)
         tab = NS.at_tables(topo, at, routed)
     sat, _ = NS.saturation_point(tab, step=step, cycles=cycles,
-                                 warmup=warmup)
+                                 warmup=warmup, traffic=traffic)
     return sat
 
 

@@ -20,14 +20,18 @@ def agg_tbps(sat_per_node: float, n: int) -> float:
 def main(full: bool = False) -> None:
     from benchmarks.fig5_saturation import saturation
     from repro.core import topology as T
+    from repro.core.traffic import TrafficPattern
 
     step = 0.04 if not full else 0.02
     pt = T.pt((4, 4, 8))
-    sat_pt, us = timed(saturation, pt, "dor", step, 2500)
+    # all-to-all == uniform demand over every ordered pair
+    a2a = TrafficPattern.uniform(pt.n)
+    sat_pt, us = timed(saturation, pt, "dor", step, 2500, 1000, 0, a2a)
     rows = [("PT+DOR", sat_pt)]
     loaded = load_tons(128)
     if loaded:
-        sat_t, _ = timed(saturation, loaded[0], "at", step, 2500)
+        sat_t, _ = timed(saturation, loaded[0], "at", step, 2500, 1000, 0,
+                         a2a)
         rows.append(("TONS+AT", sat_t))
     print("# sustained a2a throughput at saturation (128 nodes)")
     for name, sat in rows:

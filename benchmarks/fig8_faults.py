@@ -12,8 +12,8 @@ from benchmarks.common import emit, load_tons, timed
 
 
 def main(full: bool = False) -> None:
-    from repro.core import fault as F, netsim as NS, routing as R, \
-        topology as T
+    from repro.core import collectives as C, fault as F, netsim as NS, \
+        routing as R, topology as T
 
     cases = [("PDTT", T.pdtt((4, 4, 8)))]
     loaded = load_tons(128)
@@ -38,11 +38,11 @@ def main(full: bool = False) -> None:
                 continue
             lmaxes.append(routed.l_max)
             if color in sim_colors:
-                from repro.core.vcalloc import allocate_vcs
-                vcs, _ = allocate_vcs(at, routed.paths)
-                tab = NS.build_tables(topo, routed, vcs, n_vc=4)
+                tab = NS.at_tables(topo, at, routed)
+                # all-to-all over the surviving reachable pairs
+                traffic = C.a2a_traffic(routed)
                 sat, _ = NS.saturation_point(tab, step=0.05, cycles=2000,
-                                             warmup=800)
+                                             warmup=800, traffic=traffic)
                 sims[color] = sat
         lmaxes = np.array(lmaxes)
         print(f"  {name}: faults={len(colors)} disconnected={disconnected}"

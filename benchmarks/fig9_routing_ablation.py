@@ -29,7 +29,7 @@ def main(full: bool = False) -> None:
         print(f"  {mode:6s}: Lmax/LB={routed.l_max / lb_load:.3f} "
               f"hops/min={routed.avg_hops / lb_hops:.3f}")
     # CPL: re-prioritize by the APL routing's chosen turn frequencies
-    freq = R.turn_frequencies(results["apl"][0].paths)
+    freq = R.turn_frequencies(results["apl"][0].table)
     at_cpl = R.allowed_turns(topo, n_vc=2, chosen_loads=freq)
     routed_cpl = R.select_paths(at_cpl, K=4, local_search_rounds=3)
     print(f"  cpl   : Lmax/LB={routed_cpl.l_max / lb_load:.3f} "
@@ -39,22 +39,18 @@ def main(full: bool = False) -> None:
 
     # Fig. 10: VC balance on TONS/AT
     at, routed = results["apl"][1], results["apl"][0]
-    _, bal = allocate_vcs(at, routed.paths, balance=True)
-    _, unbal = allocate_vcs(at, routed.paths, balance=False)
+    bal = allocate_vcs(at, routed.table.copy(), balance=True)
+    unbal = allocate_vcs(at, routed.table.copy(), balance=False)
     print(f"  VC hops balanced={bal.tolist()} unbalanced={unbal.tolist()}")
     emit("fig10_vc_balance", 0,
          f"max/min={bal.max() / max(bal.min(), 1):.3f}")
 
     # Fig. 11: DOR skew on the torus baseline
     pt = T.pt((4, 4, 8))
-    _, dvc = NS.dor_paths(pt)
-    counts = np.zeros(2, np.int64)
-    for v in dvc.values():
-        for x in v:
-            counts[x] += 1
+    counts = NS.dor_paths(pt).vc_hop_counts()
     at_pt = R.allowed_turns(pt, n_vc=2, priority="apl")
     routed_pt = R.select_paths(at_pt, K=4, local_search_rounds=2)
-    _, at_counts = allocate_vcs(at_pt, routed_pt.paths, balance=True)
+    at_counts = allocate_vcs(at_pt, routed_pt.table, balance=True)
     print(f"  DOR hops/VC={counts.tolist()}  AT hops/VC="
           f"{at_counts.tolist()}")
     emit("fig11_dor_vc0_share", 0,

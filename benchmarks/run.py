@@ -19,12 +19,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="also write machine-readable BENCH_netsim.json "
+                         "(netsim sweep wall-clock + per-pattern "
+                         "saturation points)")
     args = ap.parse_args()
 
-    from benchmarks import (fig1_smallgraphs, fig2_progress,
+    from benchmarks import (bench_netsim, fig1_smallgraphs, fig2_progress,
                             fig3_analytical, fig5_saturation,
                             fig6_collectives, fig7_traces, fig8_faults,
                             fig9_routing_ablation, roofline)
+    json_out = Path(__file__).parent.parent / "BENCH_netsim.json" \
+        if args.json else None
     suites = [
         ("fig1_smallgraphs", fig1_smallgraphs.main),
         ("fig2_progress", fig2_progress.main),
@@ -35,6 +41,8 @@ def main() -> None:
         ("fig8_faults", fig8_faults.main),
         ("fig9_routing_ablation", fig9_routing_ablation.main),
         ("roofline", roofline.main),
+        ("bench_netsim",
+         lambda full=False: bench_netsim.main(full, json_path=json_out)),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

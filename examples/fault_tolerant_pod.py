@@ -50,6 +50,23 @@ def main() -> None:
           f"({routed.l_max / base.l_max:.2f}x degradation)")
     assert routed.unreachable == 0
 
+    # simulate the degraded fabric under several traffic patterns: one
+    # vmapped kernel serves them all, only the alias tables change
+    from repro.core import netsim as NS
+    from repro.core.demand import WorkloadDemand
+    from repro.core.traffic import TrafficPattern
+    tab = NS.at_tables(topo, at, routed)
+    wd = WorkloadDemand(topo.pod, w_same_cube=2.0, w_ring=2.0,
+                        w_uniform=0.25)
+    patterns = [TrafficPattern.uniform(topo.n),
+                TrafficPattern.transpose(topo.pod),
+                TrafficPattern.hotspot(topo.n, [0, 1, 2, 3], 0.4),
+                TrafficPattern.from_demand(wd)]
+    for pat in patterns:
+        r = NS.run(tab, 0.05, traffic=pat, cycles=1200, warmup=400)
+        print(f"  {pat.name:10s}: delivered {r['delivered']:.4f} "
+              f"of offered {r['offered']:.4f} under the fault")
+
     # --- framework side ----------------------------------------------------
     print("== training survives preemption via checkpoint restore ==")
     from repro.configs.registry import get_config

@@ -39,9 +39,10 @@ def main() -> None:
     print("== deadlock-free routing within 2 VCs ==")
     at = R.allowed_turns(res.topology, n_vc=2, priority="apl", robust=True)
     routed = R.select_paths(at, K=4, local_search_rounds=3)
-    vcs, counts = allocate_vcs(at, routed.paths)
-    assert verify_deadlock_free(at, routed.paths, vcs)
-    print(f"all {len(routed.paths)} pairs routed; L_max={routed.l_max:.0f} "
+    counts = allocate_vcs(at, routed.table)
+    assert verify_deadlock_free(at, routed.table)
+    print(f"all {routed.table.n_routed()} pairs routed; "
+          f"L_max={routed.l_max:.0f} "
           f"(MCF bound {1 / lam:.0f}); VC hop balance={counts.tolist()}")
 
 

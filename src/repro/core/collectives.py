@@ -97,7 +97,7 @@ def all_to_all(topo: Topology, routed: RoutingResult,
                mcf_lambda: Optional[float] = None) -> Schedule:
     """One chunk per ordered pair along the selected static paths; the
     schedule length is the max channel load; the MCF limit is 1/lambda."""
-    transmissions = float(sum(len(p) for p in routed.paths.values()))
+    transmissions = float(routed.table.hops.sum())
     n_channels = 2 * len(topo.edges())
     ideal = 1.0 / mcf_lambda if mcf_lambda else \
         transmissions / n_channels
@@ -133,5 +133,15 @@ def effective_a2a_bandwidth(topo_lambda: float, n: int,
 
 def a2a_trace(topo: Topology, routed: RoutingResult, chunks_per_pair: int = 1
               ) -> List[Tuple[int, int, int]]:
-    """(src, dst, n_chunks) trace for the packet simulator."""
-    return [(s, d, chunks_per_pair) for (s, d) in routed.paths.keys()]
+    """(src, dst, n_chunks) trace for the packet simulator (API edge)."""
+    ss, dd = np.nonzero(routed.table.routed_mask())
+    return [(int(s), int(d), chunks_per_pair) for s, d in zip(ss, dd)]
+
+
+def a2a_traffic(routed: RoutingResult):
+    """All-to-all as a simulator TrafficPattern: uniform demand over every
+    routed ordered pair (equals uniform-random when all pairs route, and
+    respects unreachable pairs under faults)."""
+    from repro.core.traffic import TrafficPattern
+    return TrafficPattern.from_matrix(
+        "all-to-all", routed.table.routed_mask().astype(np.float64))

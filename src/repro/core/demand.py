@@ -65,6 +65,17 @@ class WorkloadDemand:
 
         return fn
 
+    def matrix(self) -> np.ndarray:
+        """Dense (n, n) pairwise weights with zero diagonal -- the bridge
+        into the simulator's TrafficPattern (repro.core.traffic)."""
+        n = self.pod.n
+        idx = np.arange(n)
+        a = np.repeat(idx, n)
+        b = np.tile(idx, n)
+        w = self.weight_fn()(a, b).reshape(n, n)
+        np.fill_diagonal(w, 0.0)
+        return w
+
 
 def from_dryrun(podspec, arch: str, shape: str,
                 dryrun_dir: str = "benchmarks/results/dryrun",

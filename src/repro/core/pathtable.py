@@ -1,0 +1,123 @@
+"""Packed-array path representation for the routing -> simulation pipeline.
+
+``PathTable`` is the single path/VC representation produced by path
+selection (`routing.select_paths`), DOR construction (`netsim.dor_paths`)
+and VC allocation (`vcalloc.allocate_vcs`), and consumed directly by the
+cycle-level simulator (`netsim.build_tables`). It packs every (src, dst)
+channel sequence into dense arrays:
+
+    path: (n, n, MAXHOP) int32   channel ids along the route, -1 padded
+    vcs:  (n, n, MAXHOP) int8    per-hop virtual-channel assignment
+    hops: (n, n)         int32   route length (0 = unrouted / self)
+
+The arrays are built incrementally (no intermediate ``Dict[(s, d), tuple]``
+structures on the hot path) and all aggregate statistics -- per-channel
+loads, L_max, average hops -- are vectorised numpy reductions. Dict views
+exist only as explicit API edges (:meth:`as_dicts` / :meth:`from_dicts`)
+for interop and debugging.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+MAXHOP = 40
+
+
+@dataclasses.dataclass
+class PathTable:
+    n: int                    # nodes
+    n_ch: int                 # directed channels
+    n_vc: int                 # virtual channels
+    path: np.ndarray          # (n, n, MAXHOP) int32, -1 pad
+    vcs: np.ndarray           # (n, n, MAXHOP) int8
+    hops: np.ndarray          # (n, n) int32
+
+    # ---- construction -----------------------------------------------------
+
+    @staticmethod
+    def empty(n: int, n_ch: int, n_vc: int = 2) -> "PathTable":
+        return PathTable(
+            n, n_ch, n_vc,
+            path=np.full((n, n, MAXHOP), -1, np.int32),
+            vcs=np.zeros((n, n, MAXHOP), np.int8),
+            hops=np.zeros((n, n), np.int32))
+
+    def copy(self) -> "PathTable":
+        return PathTable(self.n, self.n_ch, self.n_vc, self.path.copy(),
+                         self.vcs.copy(), self.hops.copy())
+
+    def set_path(self, s: int, d: int, channels,
+                 vcs: Optional[List[int]] = None) -> None:
+        """Incremental single-pair fill (API edge / tests)."""
+        L = min(len(channels), MAXHOP)
+        self.path[s, d, :L] = channels[:L]
+        self.hops[s, d] = L
+        if vcs is not None:
+            self.vcs[s, d, :L] = vcs[:L]
+
+    def set_paths_batch(self, src: np.ndarray, dst: np.ndarray,
+                        chan: np.ndarray, length: np.ndarray) -> None:
+        """Bulk fill: chan is (F, MAXHOP) padded with -1 (or any negative)."""
+        L = chan.shape[1]
+        self.path[src, dst, :L] = np.where(chan < 0, -1, chan)
+        self.hops[src, dst] = length
+
+    # ---- vectorised statistics -------------------------------------------
+
+    def routed_mask(self) -> np.ndarray:
+        """(n, n) bool: pairs with a route (excludes self / unrouted)."""
+        return self.hops > 0
+
+    def n_routed(self) -> int:
+        return int(self.routed_mask().sum())
+
+    def loads(self) -> np.ndarray:
+        """Per-channel load: number of routes crossing each channel."""
+        used = self.path[self.path >= 0]
+        return np.bincount(used, minlength=self.n_ch).astype(np.float64)
+
+    def l_max(self) -> float:
+        loads = self.loads()
+        return float(loads.max()) if loads.size else 0.0
+
+    def avg_hops(self) -> float:
+        m = self.routed_mask()
+        return float(self.hops[m].mean()) if m.any() else 0.0
+
+    def vc_hop_counts(self) -> np.ndarray:
+        """Hops assigned to each VC across all routes, (n_vc,)."""
+        valid = self.path >= 0
+        return np.bincount(self.vcs[valid].astype(np.int64),
+                           minlength=self.n_vc)
+
+    # ---- dict views (API edges only) -------------------------------------
+
+    def as_dicts(self) -> Tuple[Dict[Tuple[int, int], Tuple[int, ...]],
+                                Dict[Tuple[int, int], List[int]]]:
+        """Materialise ``{(s, d): channel tuple}`` / ``{(s, d): vc list}``.
+
+        O(n^2) python -- strictly an interop/debugging edge, never called
+        on the routing -> simulation hot path.
+        """
+        paths: Dict[Tuple[int, int], Tuple[int, ...]] = {}
+        vcs: Dict[Tuple[int, int], List[int]] = {}
+        ss, dd = np.nonzero(self.routed_mask())
+        for s, d in zip(ss.tolist(), dd.tolist()):
+            L = int(self.hops[s, d])
+            paths[(s, d)] = tuple(int(c) for c in self.path[s, d, :L])
+            vcs[(s, d)] = [int(v) for v in self.vcs[s, d, :L]]
+        return paths, vcs
+
+    @staticmethod
+    def from_dicts(n: int, n_ch: int,
+                   paths: Dict[Tuple[int, int], Tuple[int, ...]],
+                   vcs: Optional[Dict[Tuple[int, int], List[int]]] = None,
+                   n_vc: int = 2) -> "PathTable":
+        """Interop edge for legacy dict-of-tuples producers."""
+        t = PathTable.empty(n, n_ch, n_vc)
+        for (s, d), p in paths.items():
+            t.set_path(s, d, list(p), None if vcs is None else vcs[(s, d)])
+        return t

@@ -15,6 +15,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.pathtable import MAXHOP, PathTable
 from repro.core.topology import Topology
 
 
@@ -415,11 +416,17 @@ def candidate_paths(at: ATResult, source: int, K: int = 8,
 
 @dataclasses.dataclass
 class RoutingResult:
-    paths: Dict[Tuple[int, int], Tuple[int, ...]]   # (s, d) -> channel seq
+    table: PathTable                                # packed (s, d) routes
     loads: np.ndarray                               # per-channel load
     l_max: float
     avg_hops: float
     unreachable: int
+
+    @property
+    def paths(self) -> Dict[Tuple[int, int], Tuple[int, ...]]:
+        """Dict view, materialised on demand (API edge only -- the
+        routing -> VC alloc -> simulation pipeline uses ``table``)."""
+        return self.table.as_dicts()[0]
 
 
 def select_paths(at: ATResult, K: int = 8, seed: int = 0,
@@ -427,68 +434,101 @@ def select_paths(at: ATResult, K: int = 8, seed: int = 0,
                  local_search_rounds: int = 3) -> RoutingResult:
     """Min-max channel load selection: greedy + local search (the paper
     solves an ILP with Gurobi; we report the achieved L_max against the
-    lower bound so the optimality gap is visible)."""
+    lower bound so the optimality gap is visible).
+
+    Candidates are packed into flat ``(F, K, MAXHOP)`` arrays as they are
+    enumerated; cost evaluation (max / sum of channel loads over each
+    candidate) is a vectorised numpy gather, and the result is written
+    straight into a :class:`PathTable` -- no per-pair dicts anywhere.
+    """
     ch = at.channels
     n = int(max(ch.src.max(), ch.dst.max())) + 1
-    cands: Dict[Tuple[int, int], List[Tuple[int, ...]]] = {}
+    SEN = ch.n                      # sentinel channel id; its load stays 0
+    f_cap = n * (n - 1)
+    cand = np.full((f_cap, K, MAXHOP), SEN, np.int32)
+    cand_len = np.zeros((f_cap, K), np.int32)
+    cand_k = np.zeros(f_cap, np.int32)
+    flow_src = np.zeros(f_cap, np.int32)
+    flow_dst = np.zeros(f_cap, np.int32)
+    F = 0
     unreachable = 0
     for s in range(n):
         per_dest = candidate_paths(at, s, K=K, dead_channels=dead_channels)
         for d in range(n):
             if d == s:
                 continue
-            if d in per_dest:
-                cands[(s, d)] = per_dest[d]
-            else:
+            plist = per_dest.get(d)
+            if not plist:
                 unreachable += 1
+                continue
+            flow_src[F] = s
+            flow_dst[F] = d
+            for i, p in enumerate(plist[:K]):
+                L = min(len(p), MAXHOP)
+                cand[F, i, :L] = p[:L]
+                cand_len[F, i] = L
+            cand_k[F] = len(plist[:K])
+            F += 1
+    cand = cand[:F]
+    cand_len = cand_len[:F]
+    cand_k = cand_k[:F]
+    flow_src = flow_src[:F]
+    flow_dst = flow_dst[:F]
 
-    loads = np.zeros(ch.n)
-    chosen: Dict[Tuple[int, int], int] = {}
+    loads = np.zeros(SEN + 1, np.int64)
+    chosen = np.zeros(F, np.int32)
     rng = np.random.default_rng(seed)
-    order = list(cands.keys())
+    valid = np.arange(K)[None, :] < cand_k[:, None]      # (F, K)
+    BIG = np.int64(F) * MAXHOP + 1
+    INF = np.iinfo(np.int64).max
+
+    def flow_costs(f: int) -> np.ndarray:
+        """Lexicographic (l_max, l_sum) per candidate, packed in one int."""
+        l = loads[cand[f]]                               # (K, MAXHOP)
+        cost = l.max(axis=1) * BIG + l.sum(axis=1)
+        return np.where(valid[f], cost, INF)
+
+    def add_path(f: int, i: int, sign: int) -> None:
+        np.add.at(loads, cand[f, i], sign)
+        loads[SEN] = 0
+
+    order = np.arange(F)
     rng.shuffle(order)
-
-    def path_cost(p):
-        lmax = max(loads[list(p)]) if p else 0
-        return (lmax, loads[list(p)].sum())
-
-    for sd in order:
-        best_i, best_cost = 0, None
-        for i, p in enumerate(cands[sd]):
-            cst = path_cost(p)
-            if best_cost is None or cst < best_cost:
-                best_i, best_cost = i, cst
-        chosen[sd] = best_i
-        loads[list(cands[sd][best_i])] += 1
+    for f in order:
+        best = int(np.argmin(flow_costs(f)))
+        chosen[f] = best
+        add_path(f, best, +1)
 
     for _ in range(local_search_rounds):
         improved = False
-        hot = int(np.argmax(loads))
-        hot_flows = [sd for sd, i in chosen.items()
-                     if hot in cands[sd][i]]
+        hot = int(np.argmax(loads[:SEN]))
+        sel = cand[np.arange(F), chosen]                 # (F, MAXHOP)
+        hot_flows = np.nonzero((sel == hot).any(axis=1))[0]
         rng.shuffle(hot_flows)
-        for sd in hot_flows:
-            cur = cands[sd][chosen[sd]]
-            loads[list(cur)] -= 1
-            best_i, best_cost = chosen[sd], path_cost(cur)
-            for i, p in enumerate(cands[sd]):
-                cst = path_cost(p)
-                if cst < best_cost:
-                    best_i, best_cost = i, cst
-            if best_i != chosen[sd]:
+        for f in hot_flows:
+            add_path(f, chosen[f], -1)
+            costs = flow_costs(f)
+            best = int(np.argmin(costs))
+            if costs[best] >= costs[chosen[f]]:
+                best = int(chosen[f])
+            if best != chosen[f]:
                 improved = True
-            chosen[sd] = best_i
-            loads[list(cands[sd][best_i])] += 1
-            new_hot = int(np.argmax(loads))
-            if loads[new_hot] < loads[hot]:
+            chosen[f] = best
+            add_path(f, best, +1)
+            if loads[:SEN].max() < loads[hot]:
                 break
         if not improved:
             break
 
-    paths = {sd: cands[sd][i] for sd, i in chosen.items()}
-    hops = np.mean([len(p) for p in paths.values()]) if paths else 0.0
-    return RoutingResult(paths, loads, float(loads.max()), float(hops),
-                         unreachable)
+    table = PathTable.empty(n, ch.n, at.n_vc)
+    sel = cand[np.arange(F), chosen]                     # (F, MAXHOP)
+    lengths = cand_len[np.arange(F), chosen]
+    table.set_paths_batch(flow_src, flow_dst,
+                          np.where(sel == SEN, -1, sel), lengths)
+    loads_final = loads[:SEN].astype(np.float64)
+    avg_hops = float(lengths.mean()) if F else 0.0
+    return RoutingResult(table, loads_final, float(loads_final.max())
+                         if F else 0.0, avg_hops, unreachable)
 
 
 def load_lower_bound(topo: Topology) -> float:
@@ -499,11 +539,17 @@ def load_lower_bound(topo: Topology) -> float:
     return total / (2 * len(topo.edges()))
 
 
-def turn_frequencies(paths: Dict[Tuple[int, int], Tuple[int, ...]]
-                     ) -> Dict[Tuple[int, int], float]:
-    """Turn usage of a chosen routing (for the CPL prioritisation)."""
-    freq: Dict[Tuple[int, int], float] = defaultdict(float)
-    for p in paths.values():
-        for a, b in zip(p[:-1], p[1:]):
-            freq[(a, b)] += 1.0
-    return dict(freq)
+def turn_frequencies(table: PathTable) -> Dict[Tuple[int, int], float]:
+    """Turn usage of a chosen routing (for the CPL prioritisation).
+
+    Vectorised bigram count over the packed path array; the returned dict
+    is keyed by turn (not by flow) and only feeds synthesis-time turn
+    prioritisation -- an API edge, not the simulation hot path.
+    """
+    a = table.path[..., :-1].astype(np.int64)
+    b = table.path[..., 1:].astype(np.int64)
+    ok = (a >= 0) & (b >= 0)
+    keys = a[ok] * table.n_ch + b[ok]
+    uniq, counts = np.unique(keys, return_counts=True)
+    return {(int(k // table.n_ch), int(k % table.n_ch)): float(c)
+            for k, c in zip(uniq, counts)}

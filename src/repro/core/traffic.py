@@ -1,0 +1,162 @@
+"""Pluggable traffic patterns for the cycle-level simulator.
+
+The paper evaluates uniform-random and all-to-all traffic only; related
+work (TopoOpt's parallelization-derived traffic, UB-Mesh's hierarchically
+localized patterns) shows traffic diversity is decisive when comparing
+topologies. A :class:`TrafficPattern` is an (n, n) non-negative demand
+matrix (zero diagonal) plus per-source relative injection intensities; it
+compiles to per-source *alias sampling tables* (Vose's method) so that the
+jitted simulator draws a destination in O(1) with two random numbers and
+two gathers -- the same kernel serves every pattern, only the table
+contents change (no per-pattern recompilation).
+
+Built-in patterns:
+
+- ``uniform``      -- uniform-random over all other nodes (paper Fig. 5)
+- ``permutation``  -- one fixed partner per source (transpose/complement)
+- ``hotspot``      -- a fraction of traffic targets a small hot set
+- ``from_demand``  -- weights from a :class:`repro.core.demand.WorkloadDemand`
+                      (parallelization-derived: DP rings + in-cube TP/EP)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledTraffic:
+    """Alias tables ready for the jitted kernel (device-transferable)."""
+    prob: np.ndarray        # (n, n) float32: alias acceptance probability
+    alias: np.ndarray       # (n, n) int32: alias destination
+    src_rate: np.ndarray    # (n,) float32: relative injection rate, mean 1
+
+
+def _alias_tables(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Vose alias construction per row. w: (n, n) non-negative weights.
+
+    O(n) per row; rows with zero mass get a degenerate table (prob 0,
+    alias 0) and must be masked by ``src_rate == 0`` on the caller side.
+    """
+    n = w.shape[0]
+    prob = np.zeros((n, n), np.float32)
+    alias = np.zeros((n, n), np.int32)
+    for s in range(n):
+        row = w[s].astype(np.float64)
+        total = row.sum()
+        if total <= 0:
+            continue
+        p = row * (n / total)
+        al = np.arange(n, dtype=np.int32)
+        pr = np.ones(n, np.float32)
+        small = [i for i in range(n) if p[i] < 1.0]
+        large = [i for i in range(n) if p[i] >= 1.0]
+        while small and large:
+            si = small.pop()
+            li = large.pop()
+            pr[si] = p[si]
+            al[si] = li
+            p[li] -= 1.0 - p[si]
+            (large if p[li] >= 1.0 else small).append(li)
+        for i in small + large:   # numerical leftovers: accept directly
+            pr[i] = 1.0
+        prob[s] = pr
+        alias[s] = al
+    return prob, alias
+
+
+@dataclasses.dataclass
+class TrafficPattern:
+    """Demand matrix + per-source intensity; compiles to alias tables."""
+    name: str
+    matrix: np.ndarray          # (n, n) float64, zero diagonal
+    src_rate: Optional[np.ndarray] = None   # (n,), defaults to row-mass/mean
+
+    def __post_init__(self):
+        m = np.asarray(self.matrix, np.float64).copy()
+        np.fill_diagonal(m, 0.0)
+        self.matrix = m
+        if self.src_rate is None:
+            mass = m.sum(axis=1)
+            mean = mass[mass > 0].mean() if (mass > 0).any() else 1.0
+            self.src_rate = (mass / mean).astype(np.float32)
+        else:
+            self.src_rate = np.asarray(self.src_rate, np.float32)
+
+    @property
+    def n(self) -> int:
+        return self.matrix.shape[0]
+
+    def compiled(self) -> CompiledTraffic:
+        prob, alias = _alias_tables(self.matrix)
+        return CompiledTraffic(prob, alias,
+                               np.asarray(self.src_rate, np.float32))
+
+    # ---- constructors -----------------------------------------------------
+
+    @staticmethod
+    def uniform(n: int) -> "TrafficPattern":
+        m = np.ones((n, n), np.float64)
+        return TrafficPattern("uniform", m)
+
+    @staticmethod
+    def permutation(perm: Sequence[int],
+                    name: str = "permutation") -> "TrafficPattern":
+        """One destination per source; fixed points inject nothing."""
+        perm = np.asarray(perm, np.int64)
+        n = len(perm)
+        m = np.zeros((n, n), np.float64)
+        src = np.arange(n)
+        ok = perm != src
+        m[src[ok], perm[ok]] = 1.0
+        return TrafficPattern(name, m)
+
+    @staticmethod
+    def transpose(pod) -> "TrafficPattern":
+        """Coordinate-transpose permutation (x, y, z) -> (z, y, x) when the
+        pod is axis-symmetric; otherwise the coordinate complement
+        (x, y, z) -> (X-1-x, Y-1-y, Z-1-z), which is a fixed-point-free
+        permutation on any pod shape."""
+        X, Y, Z = pod.dims
+        coords = pod.all_coords()
+        if X == Z:
+            perm = coords[:, 2] + X * (coords[:, 1] + Y * coords[:, 0])
+            return TrafficPattern.permutation(perm, name="transpose")
+        comp = np.array(pod.dims) - 1 - coords
+        perm = comp[:, 0] + X * (comp[:, 1] + Y * comp[:, 2])
+        return TrafficPattern.permutation(perm, name="transpose")
+
+    @staticmethod
+    def hotspot(n: int, hot: Optional[Sequence[int]] = None,
+                frac: float = 0.5) -> "TrafficPattern":
+        """``frac`` of each source's traffic targets the hot set uniformly,
+        the rest is uniform-random over the non-hot nodes."""
+        if hot is None:
+            hot = [0]
+        hot = np.asarray(sorted(set(int(h) for h in hot)), np.int64)
+        cold = np.ones((n, n), np.float64)
+        cold[:, hot] = 0.0
+        np.fill_diagonal(cold, 0.0)
+        cold_mass = cold.sum(axis=1, keepdims=True)
+        m = cold / np.maximum(cold_mass, 1e-12) * (1.0 - frac)
+        hotm = np.zeros((n, n), np.float64)
+        hotm[:, hot] = 1.0
+        np.fill_diagonal(hotm, 0.0)
+        hot_mass = hotm.sum(axis=1, keepdims=True)
+        m = m + hotm / np.maximum(hot_mass, 1e-12) * frac
+        return TrafficPattern(f"hotspot{len(hot)}", m,
+                              src_rate=np.ones(n, np.float32))
+
+    @staticmethod
+    def from_demand(wd) -> "TrafficPattern":
+        """Weights from a WorkloadDemand (repro.core.demand): DP all-reduce
+        rings across cubes + TP/EP all-to-all inside cubes + uniform floor,
+        i.e. traffic derived from the job's parallelization strategy."""
+        return TrafficPattern("demand", wd.matrix())
+
+    @staticmethod
+    def from_matrix(name: str, matrix: np.ndarray,
+                    src_rate: Optional[np.ndarray] = None) -> "TrafficPattern":
+        return TrafficPattern(name, matrix, src_rate)

@@ -4,18 +4,23 @@ Each selected channel-path gets a per-hop VC assignment found by search
 over the allowed-turn CDG. The naive policy biases VC 0; TONS's online
 load balancer marks the VC with the lowest accumulated hop count as
 "priority" before each path and tries it first at every hop.
+
+Assignments are written directly into the packed ``PathTable.vcs`` array
+(the same structure the simulator consumes); per-VC hop counts come back
+as a vector. Dict-based inputs are not accepted -- convert at the edge
+with :meth:`PathTable.from_dicts` if needed.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 
+from repro.core.pathtable import PathTable
 from repro.core.routing import ATResult
 
 
-def _assign_path(at: ATResult, path: Tuple[int, ...], priority: int
-                 ) -> Optional[List[int]]:
+def _assign_path(at: ATResult, path, priority: int) -> Optional[List[int]]:
     """DFS over VC choices along a fixed channel sequence; tries the
     priority VC first at every hop."""
     n_vc = at.n_vc
@@ -34,35 +39,37 @@ def _assign_path(at: ATResult, path: Tuple[int, ...], priority: int
     return rec(0, -1)
 
 
-def allocate_vcs(at: ATResult,
-                 paths: Dict[Tuple[int, int], Tuple[int, ...]],
-                 balance: bool = True
-                 ) -> Tuple[Dict[Tuple[int, int], List[int]], np.ndarray]:
-    """Returns per-pair VC sequences and hops-per-VC counts."""
+def allocate_vcs(at: ATResult, table: PathTable,
+                 balance: bool = True) -> np.ndarray:
+    """Fill ``table.vcs`` in place for every routed pair; returns the
+    hops-per-VC counts ``(n_vc,)``."""
     counts = np.zeros(at.n_vc, dtype=np.int64)
-    out: Dict[Tuple[int, int], List[int]] = {}
-    for sd in sorted(paths.keys()):
+    ss, dd = np.nonzero(table.hops > 0)      # row-major == sorted (s, d)
+    for s, d in zip(ss.tolist(), dd.tolist()):
+        L = int(table.hops[s, d])
+        path = [int(c) for c in table.path[s, d, :L]]
         pr = int(np.argmin(counts)) if balance else 0
-        vcs = _assign_path(at, paths[sd], pr)
+        vcs = _assign_path(at, path, pr)
         if vcs is None:  # should not happen: paths came from the state BFS
-            vcs = _assign_path(at, paths[sd], 0)
+            vcs = _assign_path(at, path, 0)
         if vcs is None:
-            raise RuntimeError(f"path {sd} has no valid VC assignment")
-        out[sd] = vcs
-        for v in vcs:
-            counts[v] += 1
-    return out, counts
+            raise RuntimeError(f"path {(s, d)} has no valid VC assignment")
+        table.vcs[s, d, :L] = vcs
+        counts += np.bincount(vcs, minlength=at.n_vc)
+    return counts
 
 
-def verify_deadlock_free(at: ATResult,
-                         paths: Dict[Tuple[int, int], Tuple[int, ...]],
-                         vcs: Dict[Tuple[int, int], List[int]]) -> bool:
+def verify_deadlock_free(at: ATResult, table: PathTable) -> bool:
     """Invariant check: every consecutive (channel, vc) hop of every routed
     flow is an allowed turn => the union of dependencies is a subgraph of
     the acyclic allowed-turn CDG => deadlock-free."""
-    for sd, p in paths.items():
-        v = vcs[sd]
-        for i in range(1, len(p)):
-            if not at.is_allowed(p[i - 1], v[i - 1], p[i], v[i]):
+    ss, dd = np.nonzero(table.hops > 1)
+    for s, d in zip(ss.tolist(), dd.tolist()):
+        L = int(table.hops[s, d])
+        p = table.path[s, d, :L]
+        v = table.vcs[s, d, :L]
+        for i in range(1, L):
+            if not at.is_allowed(int(p[i - 1]), int(v[i - 1]),
+                                 int(p[i]), int(v[i])):
                 return False
     return True

@@ -428,13 +428,21 @@ def init_mamba(key, cfg) -> Params:
 
 
 def _causal_conv(u, w, b):
-    """Depthwise causal conv. u: (B, S, C); w: (C, K)."""
+    """Depthwise causal conv in f32. u: (B, S, C); w: (C, K).
+
+    The accumulation is kept in float32 so that the prefill (full-sequence)
+    and decode (single-step window) lowerings agree bitwise-closely; in bf16
+    the two orderings drift ~0.5% per layer, which compounds across deep
+    hybrid stacks and flips MoE expert selections during decode.
+    """
     K = w.shape[1]
+    u = u.astype(jnp.float32)
+    w = w.astype(jnp.float32)
     acc = u * w[:, K - 1]
     for i in range(1, K):
         shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :u.shape[1]]
         acc = acc + shifted * w[:, K - 1 - i]
-    return acc + b
+    return acc + b.astype(jnp.float32)
 
 
 def _mamba_proj(p, x, cfg):
@@ -567,7 +575,10 @@ def mamba_decode(p, x, cfg, cache):
     xbc = xbc[:, 0]  # (B, C)
     conv_state = cache["conv"]  # (B, K-1, C)
     window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B, K, C)
-    conv_out = jnp.einsum("bkc,ck->bc", window, p["conv_w"]) + p["conv_b"]
+    # f32 to match _causal_conv's prefill accumulation (see note there)
+    conv_out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) \
+        + p["conv_b"].astype(jnp.float32)
     conv_out = jax.nn.silu(conv_out)
     new_conv = window[:, 1:]
     xs, Bm, Cm = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)

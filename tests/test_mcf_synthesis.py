@@ -40,6 +40,7 @@ def test_radix_is_six():
         assert (deg == 6).all(), make
 
 
+@pytest.mark.slow
 def test_symmetry_reduction_preserves_mcf():
     """Cube-translation-reduced LP == unreduced LP on a small pod."""
     topo = T.pt((4, 4, 8))

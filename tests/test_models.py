@@ -28,6 +28,7 @@ def _batch(cfg, B=2, S=32, seed=0):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_arch_smoke_forward_and_train_step(arch):
     """Reduced config of the same family: one forward + one train step on
@@ -51,6 +52,7 @@ def test_arch_smoke_forward_and_train_step(arch):
                            np.asarray(d1, np.float32))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-2.7b",
                                   "jamba-v0.1-52b", "deepseek-moe-16b",
                                   "seamless-m4t-medium"])

@@ -50,24 +50,43 @@ def test_cdg_acyclic(at128):
 
 def test_all_pairs_routable(routed128, pt128):
     assert routed128.unreachable == 0
-    assert len(routed128.paths) == pt128.n * (pt128.n - 1)
+    assert routed128.table.n_routed() == pt128.n * (pt128.n - 1)
 
 
 def test_paths_are_connected_channel_sequences(routed128, at128):
+    """Vectorised over every routed pair at once (array-native table)."""
     ch = at128.channels
-    for (s, d), p in list(routed128.paths.items())[::97]:
-        assert int(ch.src[p[0]]) == s
-        assert int(ch.dst[p[-1]]) == d
-        for a, b in zip(p[:-1], p[1:]):
-            assert int(ch.dst[a]) == int(ch.src[b])
+    t = routed128.table
+    ss, dd = np.nonzero(t.routed_mask())
+    first = t.path[ss, dd, 0]
+    last = t.path[ss, dd, t.hops[ss, dd] - 1]
+    assert (ch.src[first] == ss).all()
+    assert (ch.dst[last] == dd).all()
+    a = t.path[..., :-1]
+    b = t.path[..., 1:]
+    ok = (a >= 0) & (b >= 0)
+    assert (ch.dst[a[ok]] == ch.src[b[ok]]).all()
+
+
+def test_paths_dict_view_matches_table(routed128, at128):
+    """The API-edge dict view stays consistent with the packed arrays."""
+    t = routed128.table
+    paths = routed128.paths
+    assert len(paths) == t.n_routed()
+    for (s, d), p in list(paths.items())[::997]:
+        L = int(t.hops[s, d])
+        assert len(p) == L
+        assert list(p) == t.path[s, d, :L].tolist()
 
 
 def test_vc_allocation_valid_and_balanced(at128, routed128):
-    vcs, counts = V.allocate_vcs(at128, routed128.paths, balance=True)
-    assert V.verify_deadlock_free(at128, routed128.paths, vcs)
+    bal_table = routed128.table.copy()
+    counts = V.allocate_vcs(at128, bal_table, balance=True)
+    assert V.verify_deadlock_free(at128, bal_table)
+    assert (counts == bal_table.vc_hop_counts()).all()
     ratio = counts.max() / max(counts.min(), 1)
     assert ratio < 1.2, f"VC imbalance {counts}"
-    _, unbal = V.allocate_vcs(at128, routed128.paths, balance=False)
+    unbal = V.allocate_vcs(at128, routed128.table.copy(), balance=False)
     assert unbal[0] > unbal[1], "naive policy should bias VC0"
 
 
@@ -77,12 +96,12 @@ def test_routed_lmax_near_mcf_bound(routed128):
 
 
 def test_dor_paths_minimal_on_torus(pt128):
-    paths, vcs = NS.dor_paths(pt128)
+    table = NS.dor_paths(pt128)
     d = T.bfs_all_pairs(pt128)
-    for (s, dd), p in list(paths.items())[::211]:
-        assert len(p) == int(d[s, dd])
+    np.testing.assert_array_equal(table.hops, d.astype(np.int64))
 
 
+@pytest.mark.slow
 def test_robust_at_survives_every_fault():
     topo = T.pt((4, 4, 8))
     at = R.allowed_turns(topo, n_vc=2, priority="random", robust=True)
@@ -107,7 +126,47 @@ def test_incremental_dag_rejects_cycles():
 
 
 def test_netsim_conservation(pt128):
+    """Regression guard for the seed's accounting deficit: the single
+    'delivered' counter mixed warmup-injected arrivals into the measured
+    window and could (just) exceed offered, while the in-flight tail made
+    it undershoot for long-latency routings. Now delivered_tagged counts
+    only window-injected packets (conservation-exact) and delivered is the
+    steady-state window consumption rate."""
     tab = NS.dor_tables(pt128)
     r = NS.run(tab, 0.05, cycles=1500, warmup=500)
-    assert r["delivered"] <= r["offered"] + 1e-9
+    assert r["delivered_tagged"] <= r["accepted"] <= r["offered"] + 1e-9
     assert r["delivered"] > 0.8 * r["offered"]
+    assert r["delivered_tagged"] > 0.8 * r["offered"]
+    # exact conservation over the whole run: every injected packet is
+    # either consumed or still queued at the end
+    assert r["injected_total"] == r["consumed_total"] + r["in_flight"]
+
+
+@pytest.fixture(scope="module")
+def dor64():
+    return NS.dor_tables(T.pt((4, 4, 4)))
+
+
+@pytest.mark.parametrize("pattern", ["uniform", "transpose", "hotspot",
+                                     "demand"])
+def test_netsim_flow_conservation_per_pattern(dor64, pattern):
+    """Every traffic pattern runs through the same jitted kernel and
+    conserves packets exactly."""
+    from repro.core.demand import WorkloadDemand
+    from repro.core.traffic import TrafficPattern
+    pod = T.Pod((4, 4, 4))
+    pat = {
+        "uniform": lambda: TrafficPattern.uniform(64),
+        "transpose": lambda: TrafficPattern.transpose(pod),
+        "hotspot": lambda: TrafficPattern.hotspot(64, [0, 5], 0.5),
+        "demand": lambda: TrafficPattern.from_demand(
+            WorkloadDemand(pod, w_same_cube=2.0, w_ring=1.0,
+                           w_uniform=0.25)),
+    }[pattern]()
+    r = NS.run(dor64, 0.04, traffic=pat, cycles=900, warmup=300)
+    assert r["injected_total"] == r["consumed_total"] + r["in_flight"]
+    assert r["delivered_tagged"] <= r["accepted"] <= r["offered"] + 1e-9
+    assert r["delivered"] > 0, f"{pattern} delivered nothing"
+    # destinations obey the pattern: a permutation saturates earlier than
+    # uniform but still flows; sanity-check utilisation is reasonable
+    assert r["delivered"] > 0.5 * r["offered"]

@@ -27,6 +27,7 @@ def test_cells_cover_assignment():
             assert ok == (a in ("mamba2-2.7b", "jamba-v0.1-52b"))
 
 
+@pytest.mark.slow
 def test_training_loss_decreases_and_resumes():
     cfg = get_config("qwen2.5-3b").smoke_model()
     with tempfile.TemporaryDirectory() as d:
@@ -59,6 +60,7 @@ def test_grad_compression_trains():
         assert out["losses"][-1] < out["losses"][0]
 
 
+@pytest.mark.slow
 def test_microbatched_grad_accumulation_matches_full():
     from repro.models import model as M
     from repro.optim import adamw

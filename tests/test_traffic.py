@@ -1,0 +1,124 @@
+"""TrafficPattern / alias tables / PathTable unit tests."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core.demand import WorkloadDemand
+from repro.core.pathtable import MAXHOP, PathTable
+from repro.core.traffic import TrafficPattern, _alias_tables
+
+
+def _alias_distribution(prob, alias):
+    """Exact sampling distribution implied by an alias table row set."""
+    n = prob.shape[0]
+    dist = np.zeros((n, n), np.float64)
+    for s in range(n):
+        for j in range(n):
+            dist[s, j] += prob[s, j] / n
+            dist[s, alias[s, j]] += (1.0 - prob[s, j]) / n
+    return dist
+
+
+@pytest.mark.parametrize("maker", [
+    lambda: TrafficPattern.uniform(24),
+    lambda: TrafficPattern.hotspot(24, [1, 7], 0.6),
+    lambda: TrafficPattern.permutation(np.roll(np.arange(24), 5)),
+    lambda: TrafficPattern.from_demand(
+        WorkloadDemand(T.Pod((4, 4, 4)), w_same_cube=3.0, w_ring=1.5,
+                       w_uniform=0.5)),
+])
+def test_alias_tables_reproduce_matrix_exactly(maker):
+    """The alias method is exact: the implied sampling distribution equals
+    the normalised demand matrix row by row."""
+    pat = maker()
+    ct = pat.compiled()
+    dist = _alias_distribution(ct.prob.astype(np.float64), ct.alias)
+    m = pat.matrix.copy()
+    rows = m.sum(axis=1)
+    live = rows > 0
+    m[live] /= rows[live][:, None]
+    np.testing.assert_allclose(dist[live], m[live], atol=1e-6)
+    assert np.abs(np.diag(dist)).max() < 1e-12, "self-traffic"
+
+
+def test_pattern_diag_zero_and_src_rates():
+    n = 16
+    u = TrafficPattern.uniform(n)
+    assert np.diag(u.matrix).sum() == 0
+    np.testing.assert_allclose(u.src_rate, 1.0)
+    # permutation with fixed points: those sources inject nothing
+    perm = np.arange(n)
+    perm[:4] = [1, 0, 3, 2]          # nodes 4.. are fixed points
+    p = TrafficPattern.permutation(perm)
+    assert (p.src_rate[4:] == 0).all()
+    assert (p.src_rate[:4] > 0).all()
+
+
+def test_transpose_is_injective_permutation():
+    # symmetric pod: coordinate swap (x,y,z)->(z,y,x); its fixed points
+    # (the x == z plane, X*Y of them) inject nothing
+    pod = T.Pod((4, 4, 4))
+    pat = TrafficPattern.transpose(pod)
+    live = pat.matrix.sum(axis=1) > 0
+    assert int(live.sum()) == pod.n - 4 * 4
+    dests = pat.matrix.argmax(axis=1)
+    assert len(set(dests[live].tolist())) == int(live.sum())
+    # asymmetric pod: coordinate complement, fixed-point-free on even dims
+    pod = T.Pod((4, 4, 8))
+    pat = TrafficPattern.transpose(pod)
+    live = pat.matrix.sum(axis=1) > 0
+    assert int(live.sum()) == pod.n
+    dests = pat.matrix.argmax(axis=1)
+    assert len(set(dests.tolist())) == pod.n
+
+
+def test_hotspot_fraction():
+    n, hot, frac = 32, [0, 1], 0.4
+    pat = TrafficPattern.hotspot(n, hot, frac)
+    m = pat.matrix / pat.matrix.sum(axis=1, keepdims=True)
+    hot_share = m[5, hot].sum()
+    assert abs(hot_share - frac) < 0.02
+
+
+def test_demand_matrix_matches_weight_fn():
+    pod = T.Pod((4, 4, 8))
+    wd = WorkloadDemand(pod, w_same_cube=2.0, w_ring=3.0, w_uniform=0.5)
+    m = wd.matrix()
+    fn = wd.weight_fn()
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, pod.n, 64)
+    b = rng.integers(0, pod.n, 64)
+    w = fn(a, b)
+    off = a != b
+    np.testing.assert_allclose(m[a[off], b[off]], w[off])
+    assert (np.diag(m) == 0).all()
+
+
+def test_pathtable_roundtrip_and_stats():
+    t = PathTable.empty(6, 20, 2)
+    t.set_path(0, 1, [3, 4, 5], [0, 0, 1])
+    t.set_path(2, 3, [7], [1])
+    assert t.n_routed() == 2
+    assert t.hops[0, 1] == 3 and t.hops[2, 3] == 1
+    loads = t.loads()
+    assert loads[3] == 1 and loads[7] == 1 and loads.sum() == 4
+    assert t.l_max() == 1.0
+    assert abs(t.avg_hops() - 2.0) < 1e-12
+    assert t.vc_hop_counts().tolist() == [2, 2]
+    paths, vcs = t.as_dicts()
+    assert paths[(0, 1)] == (3, 4, 5)
+    assert vcs[(0, 1)] == [0, 0, 1]
+    back = PathTable.from_dicts(6, 20, paths, vcs)
+    np.testing.assert_array_equal(back.path, t.path)
+    np.testing.assert_array_equal(back.vcs, t.vcs)
+    np.testing.assert_array_equal(back.hops, t.hops)
+
+
+def test_alias_degenerate_rows():
+    """All-zero rows compile without NaNs and are masked by src_rate."""
+    m = np.zeros((4, 4))
+    m[0, 1] = 1.0
+    pat = TrafficPattern.from_matrix("deg", m)
+    ct = pat.compiled()
+    assert np.isfinite(ct.prob).all()
+    assert (pat.src_rate[1:] == 0).all()
