@@ -23,7 +23,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent))
 
-from benchmarks.common import emit
+from benchmarks.common import emit, load_bench_json
 
 SPEC = (4, 4, 4)
 
@@ -249,6 +249,10 @@ def main(full: bool = False, json_path=None) -> dict:
         "saturation": {k: round(v, 5) for k, v in sats.items()},
     }
     if json_path:
+        prior = load_bench_json(json_path)
+        if prior.get("sweep_speedup_vs_seed"):
+            print(f"  prior sweep speedup: "
+                  f"{prior['sweep_speedup_vs_seed']}x")
         Path(json_path).write_text(json.dumps(result, indent=2) + "\n")
         print(f"  wrote {json_path}")
     return result

@@ -1,0 +1,106 @@
+"""Routing-engine perf tracking: array state-CSR pipeline vs the seed's
+per-source python BFS + per-flow greedy (kept as ``engine="reference"``).
+
+Measures, on PT pods of 64 / 256 / 512 chips (4^3 / 4x8x8 / 8^3):
+
+- wall-clock of candidate enumeration + min-max path selection for both
+  engines (the reference is skipped above ``REF_CAP`` nodes unless
+  ``--full`` -- it is minutes-slow there, which is the point);
+- achieved L_max of both (the array engine must stay within a few % --
+  it usually wins);
+- the full 8^3 end-to-end chain: allowed turns -> candidate enumeration
+  -> path selection -> VC allocation -> simulator tables.
+
+``--json`` (or ``main(json_path=...)``) writes BENCH_routing.json so the
+perf trajectory is tracked from PR to PR; prior results, if any, are
+loaded tolerantly and printed for comparison.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from benchmarks.common import emit, load_bench_json
+
+SPECS = [("n64", (4, 4, 4)), ("n256", (4, 8, 8)), ("n512", (8, 8, 8))]
+REF_CAP = 256          # largest pod the reference engine runs in quick mode
+
+
+def main(full: bool = False, json_path=None) -> dict:
+    from repro.core import netsim as NS, routing as R, topology as T
+
+    prior = load_bench_json(json_path) if json_path else {}
+    result: dict = {"K": 4, "local_search_rounds": 2, "sizes": {}}
+    for name, spec in SPECS:
+        topo = T.pt(spec)
+        t0 = time.time()
+        at = R.allowed_turns(topo, n_vc=2, priority="apl")
+        t_at = time.time() - t0
+        # sub-second timings at 64 chips are noisy: take best-of-3
+        reps = 3 if topo.n <= 64 else 1
+        t_arr = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            arr = R.select_paths(at, K=4, local_search_rounds=2,
+                                 engine="array")
+            t_arr = min(t_arr, time.time() - t0)
+        row = {
+            "pod": list(spec),
+            "allowed_turns_s": round(t_at, 3),
+            "array_select_s": round(t_arr, 3),
+            "array_l_max": arr.l_max,
+            "avg_hops": round(arr.avg_hops, 4),
+            "unreachable": arr.unreachable,
+        }
+        if topo.n <= REF_CAP or full:
+            t_ref = float("inf")
+            for _ in range(reps):
+                t0 = time.time()
+                ref = R.select_paths(at, K=4, local_search_rounds=2,
+                                     engine="reference")
+                t_ref = min(t_ref, time.time() - t0)
+            row["reference_select_s"] = round(t_ref, 3)
+            row["reference_l_max"] = ref.l_max
+            row["speedup"] = round(t_ref / max(t_arr, 1e-9), 2)
+            print(f"  {name}: reference={t_ref:.2f}s array={t_arr:.2f}s "
+                  f"-> {row['speedup']:.1f}x  "
+                  f"lmax {arr.l_max:.0f}/{ref.l_max:.0f}")
+        else:
+            print(f"  {name}: array={t_arr:.2f}s lmax={arr.l_max:.0f} "
+                  f"(reference skipped; --full runs it)")
+        if topo.n == 512:
+            t0 = time.time()
+            tab = NS.at_tables(topo, at, arr)
+            t_tab = time.time() - t0
+            row["vcalloc_tables_s"] = round(t_tab, 3)
+            row["end_to_end_s"] = round(t_at + t_arr + t_tab, 3)
+            print(f"  {name}: end-to-end (AT -> paths -> VC alloc -> "
+                  f"tables) = {row['end_to_end_s']:.1f}s")
+        result["sizes"][name] = row
+    sp = result["sizes"]["n64"].get("speedup", 0.0)
+    emit("bench_routing_speedup_n64",
+         result["sizes"]["n64"]["array_select_s"] * 1e6, f"{sp:.2f}x")
+    emit("bench_routing_e2e_n512",
+         result["sizes"]["n512"]["end_to_end_s"] * 1e6,
+         f"lmax={result['sizes']['n512']['array_l_max']:.0f}")
+    if prior.get("sizes", {}).get("n64", {}).get("speedup"):
+        print(f"  prior n64 speedup: {prior['sizes']['n64']['speedup']}x")
+    if json_path:
+        Path(json_path).write_text(json.dumps(result, indent=2) + "\n")
+        print(f"  wrote {json_path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    main(args.full,
+         json_path=Path(__file__).parent.parent / "BENCH_routing.json"
+         if args.json else None)

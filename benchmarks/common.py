@@ -27,6 +27,16 @@ def load_tons(n: int):
     return topo, d
 
 
+def load_bench_json(json_path) -> dict:
+    """Prior BENCH_*.json contents, or {} when the file is missing or
+    corrupt -- benchmark runs must never crash on absent history."""
+    import json
+    try:
+        return json.loads(Path(json_path).read_text())
+    except (OSError, ValueError, TypeError):
+        return {}
+
+
 def timed(fn, *args, **kw):
     t0 = time.time()
     out = fn(*args, **kw)

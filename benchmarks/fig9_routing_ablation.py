@@ -12,8 +12,13 @@ def main(full: bool = False) -> None:
     from repro.core import netsim as NS, routing as R, topology as T
     from repro.core.vcalloc import allocate_vcs
 
-    loaded = load_tons(128)
-    topo = loaded[0] if loaded else T.pdtt((4, 4, 8))
+    # --full ablates on a 512-chip 8^3 pod (synthesized TONS if cached,
+    # else PDTT) -- feasible since the array routing engine; quick mode
+    # keeps the 128-chip pod. The pod scale depends only on --full, not
+    # on which TONS caches happen to exist.
+    loaded = load_tons(512) if full else load_tons(128)
+    topo = loaded[0] if loaded else \
+        T.pdtt((8, 8, 8) if full else (4, 4, 8))
     lb_hops = None
     from repro.core.topology import bfs_all_pairs
     d = bfs_all_pairs(topo)

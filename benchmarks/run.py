@@ -22,15 +22,17 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="also write machine-readable BENCH_netsim.json "
                          "(netsim sweep wall-clock + per-pattern "
-                         "saturation points)")
+                         "saturation points) and BENCH_routing.json "
+                         "(routing-engine wall-clock at 64/256/512 chips)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_netsim, fig1_smallgraphs, fig2_progress,
-                            fig3_analytical, fig5_saturation,
+    from benchmarks import (bench_netsim, bench_routing, fig1_smallgraphs,
+                            fig2_progress, fig3_analytical, fig5_saturation,
                             fig6_collectives, fig7_traces, fig8_faults,
                             fig9_routing_ablation, roofline)
-    json_out = Path(__file__).parent.parent / "BENCH_netsim.json" \
-        if args.json else None
+    root = Path(__file__).parent.parent
+    netsim_json = root / "BENCH_netsim.json" if args.json else None
+    routing_json = root / "BENCH_routing.json" if args.json else None
     suites = [
         ("fig1_smallgraphs", fig1_smallgraphs.main),
         ("fig2_progress", fig2_progress.main),
@@ -42,7 +44,10 @@ def main() -> None:
         ("fig9_routing_ablation", fig9_routing_ablation.main),
         ("roofline", roofline.main),
         ("bench_netsim",
-         lambda full=False: bench_netsim.main(full, json_path=json_out)),
+         lambda full=False: bench_netsim.main(full, json_path=netsim_json)),
+        ("bench_routing",
+         lambda full=False: bench_routing.main(full,
+                                               json_path=routing_json)),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

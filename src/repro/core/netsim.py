@@ -439,14 +439,21 @@ def dor_tables(topo: Topology, n_vc: int = 2) -> SimTables:
 
 
 def at_tables(topo: Topology, at: ATResult, routed: RoutingResult,
-              balance: bool = True) -> SimTables:
+              balance: Optional[bool] = True) -> SimTables:
     """VC-allocate the routed paths and build simulator tables.
 
     Works on a copy of ``routed.table`` so the caller's RoutingResult is
     not mutated and the returned SimTables cannot be rewritten by later
-    allocations on the same result."""
+    allocations on the same result.
+
+    ``balance=None`` skips re-allocation and keeps the VC assignment
+    already in the table -- the array path-selection engine emits each
+    winning candidate's BFS state-path VCs, which are valid by
+    construction (fast path for large pods / fault sweeps where the
+    balanced re-allocation is not needed)."""
     from repro.core.vcalloc import allocate_vcs
     table = routed.table.copy()
-    allocate_vcs(at, table, balance=balance)
+    if balance is not None:
+        allocate_vcs(at, table, balance=balance)
     table.n_vc = at.n_vc
     return build_tables(topo, table)

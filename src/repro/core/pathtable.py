@@ -59,11 +59,16 @@ class PathTable:
             self.vcs[s, d, :L] = vcs[:L]
 
     def set_paths_batch(self, src: np.ndarray, dst: np.ndarray,
-                        chan: np.ndarray, length: np.ndarray) -> None:
-        """Bulk fill: chan is (F, MAXHOP) padded with -1 (or any negative)."""
+                        chan: np.ndarray, length: np.ndarray,
+                        vcs: Optional[np.ndarray] = None) -> None:
+        """Bulk fill: chan is (F, W) padded with -1 (or any negative);
+        ``vcs`` (same shape) optionally sets per-hop VC assignments."""
         L = chan.shape[1]
         self.path[src, dst, :L] = np.where(chan < 0, -1, chan)
         self.hops[src, dst] = length
+        if vcs is not None:
+            live = np.arange(L)[None, :] < np.asarray(length)[:, None]
+            self.vcs[src, dst, :L] = np.where(live, vcs, 0).astype(np.int8)
 
     # ---- vectorised statistics -------------------------------------------
 

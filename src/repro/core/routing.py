@@ -6,6 +6,37 @@ selection: a greedy allowed-turn construction keeps the channel dependency
 graph acyclic (incremental cycle detection); all shortest deadlock-free
 paths are enumerated per pair; a min-max load optimisation then picks one
 static path per (src, dst). Turn prioritisation: APL / CPL / Random.
+
+Array layout of the routing engine (PR 2)
+-----------------------------------------
+
+The hot path is a packed-array pipeline over *states* ``s = c * n_vc + v``
+(channel ``c`` on virtual channel ``v``; ``S = C * n_vc`` states total):
+
+- :class:`StateGraph` compiles ``ATResult.allowed`` once into (a) a CSR
+  adjacency used for frontier expansion, (b) a ``(S, D)`` padded reverse
+  adjacency (``D`` = max in-degree) for parent walks, and (c) a sorted
+  ``a * S + b`` edge-key array for O(log E) membership tests (VC alloc,
+  deadlock verification).
+- :func:`state_bfs` runs a level-synchronous BFS batched over a block of
+  sources: the frontier is a dense ``(B, S)`` boolean, each level is one
+  sparse-matrix product with the transposed CSR, and distances land in a
+  ``(B, S)`` int16 array (-1 = unreached, seeds at distance 1).
+- :func:`enumerate_candidates` turns distances into the packed
+  ``(F, K, L)`` candidate tensor (``L`` = longest shortest path, SEN-padded
+  channels + per-hop VCs) with a vectorised backward walk over the parent
+  DAG: all ``F * K`` walkers step one BFS level per iteration, and each
+  walker's mixed-radix "k-code" picks which parent to take so distinct
+  codes enumerate distinct shortest paths.
+- :func:`select_paths` evaluates the lexicographic ``(l_max, l_sum)`` cost
+  of whole flow blocks at once (one gather of channel loads per block) for
+  the greedy pass, then runs block-parallel local search with exact
+  own-load removal. The per-flow python loops of the seed implementation
+  are kept verbatim as ``engine="reference"`` -- the equivalence oracle.
+
+Everything downstream (VC allocation, ``netsim.build_tables``) consumes the
+same packed :class:`~repro.core.pathtable.PathTable`; an 8^3 pod (512
+chips, ~3k channels) routes end-to-end in seconds.
 """
 from __future__ import annotations
 
@@ -26,31 +57,49 @@ from repro.core.topology import Topology
 
 @dataclasses.dataclass
 class Channels:
-    """Directed channels of an undirected topology."""
+    """Directed channels of an undirected topology.
+
+    Besides the flat ``src``/``dst``/``color`` arrays, carries an
+    out-adjacency CSR (``out_indptr``/``out_chan``) and the opposite
+    direction of every channel (``rev``), so per-node queries are O(deg)
+    slices instead of O(C) boolean scans.
+    """
     src: np.ndarray           # (C,)
     dst: np.ndarray           # (C,)
     color: np.ndarray         # OCS color or -1 (electrical)
     index: Dict[Tuple[int, int], int]
+    out_indptr: np.ndarray    # (n_nodes + 1,) CSR offsets into out_chan
+    out_chan: np.ndarray      # (C,) channel ids grouped by source node
+    rev: np.ndarray           # (C,) channel id of the reverse direction
 
     @staticmethod
     def from_topology(topo: Topology) -> "Channels":
         e = topo.edges()
         col = topo.edge_colors()
-        src = np.concatenate([e[:, 0], e[:, 1]])
-        dst = np.concatenate([e[:, 1], e[:, 0]])
-        color = np.concatenate([col, col])
+        src = np.concatenate([e[:, 0], e[:, 1]]).astype(np.int32)
+        dst = np.concatenate([e[:, 1], e[:, 0]]).astype(np.int32)
+        color = np.concatenate([col, col]).astype(np.int32)
         index = {(int(s), int(d)): i for i, (s, d) in
                  enumerate(zip(src, dst))}
-        return Channels(src.astype(np.int32), dst.astype(np.int32),
-                        color.astype(np.int32), index)
+        order = np.argsort(src, kind="stable").astype(np.int32)
+        out_indptr = np.searchsorted(src[order],
+                                     np.arange(topo.n + 1)).astype(np.int64)
+        E = len(e)
+        rev = np.concatenate([np.arange(E, 2 * E), np.arange(E)]) \
+            .astype(np.int32)
+        return Channels(src, dst, color, index, out_indptr, order, rev)
 
     @property
     def n(self) -> int:
         return len(self.src)
 
-    def out_of(self, node: int) -> List[int]:
-        return [self.index[(node, d)] for d in
-                self.dst[self.src == node].tolist()]
+    @property
+    def n_nodes(self) -> int:
+        return len(self.out_indptr) - 1
+
+    def out_of(self, node: int) -> np.ndarray:
+        """Channels leaving ``node`` -- an O(deg) CSR slice."""
+        return self.out_chan[self.out_indptr[node]:self.out_indptr[node + 1]]
 
 
 # ---------------------------------------------------------------------------
@@ -118,6 +167,67 @@ class IncrementalDAG:
 
 
 # ---------------------------------------------------------------------------
+# State graph: packed CSR over (channel, vc) states
+# ---------------------------------------------------------------------------
+
+
+def _state(c: int, v: int, n_vc: int) -> int:
+    return c * n_vc + v
+
+
+@dataclasses.dataclass
+class StateGraph:
+    """CSR forms of the allowed-turn DAG over ``c * n_vc + v`` states,
+    compiled once per :class:`ATResult` and shared by the batched BFS,
+    candidate enumeration and vectorised VC allocation."""
+    n_states: int
+    n_vc: int
+    keys: np.ndarray          # (E,) sorted a * n_states + b edge keys
+    fwd_T: object             # scipy CSR of the transposed adjacency
+    rev_pad: np.ndarray       # (S, D) int32 parents of each state, -1 pad
+    dst_node: np.ndarray      # (S,) arrival node of each state's channel
+    node_order: np.ndarray    # (S,) state ids sorted by dst_node
+    node_starts: np.ndarray   # (n_nodes + 1,) segment offsets in node_order
+
+    def has_edges(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Vectorised membership test for state edges a -> b."""
+        q = a.astype(np.int64) * self.n_states + b.astype(np.int64)
+        if len(self.keys) == 0:
+            return np.zeros(q.shape, bool)
+        i = np.clip(np.searchsorted(self.keys, q), 0, len(self.keys) - 1)
+        return self.keys[i] == q
+
+
+def _build_state_graph(at: "ATResult") -> StateGraph:
+    import scipy.sparse as sp
+    ch = at.channels
+    n_vc = at.n_vc
+    S = ch.n * n_vc
+    if at.allowed:
+        ab = np.array([(ci * n_vc + v0, co * n_vc + v1)
+                       for ((ci, v0), (co, v1)) in at.allowed], np.int64)
+        a, b = ab[:, 0], ab[:, 1]
+    else:
+        a = b = np.zeros(0, np.int64)
+    keys = np.sort(a * S + b)
+    adj = sp.csr_matrix((np.ones(len(a), np.float32), (a, b)), shape=(S, S))
+    fwd_T = adj.T.tocsr()
+    order = np.argsort(b, kind="stable")
+    bs, as_ = b[order], a[order]
+    deg = np.bincount(bs, minlength=S)
+    D = max(int(deg.max()) if len(a) else 0, 1)
+    rev_pad = np.full((S, D), -1, np.int32)
+    starts = np.searchsorted(bs, np.arange(S))
+    rev_pad[bs, np.arange(len(bs)) - starts[bs]] = as_
+    dst_node = ch.dst[np.arange(S) // n_vc].astype(np.int64)
+    node_order = np.argsort(dst_node, kind="stable")
+    node_starts = np.searchsorted(dst_node[node_order],
+                                  np.arange(ch.n_nodes + 1))
+    return StateGraph(S, n_vc, keys, fwd_T, rev_pad, dst_node,
+                      node_order, node_starts)
+
+
+# ---------------------------------------------------------------------------
 # Allowed-turn construction (Algorithms 1 & 2)
 # ---------------------------------------------------------------------------
 
@@ -129,20 +239,23 @@ class ATResult:
     allowed: set                       # ((c_in, v0), (c_out, v1))
     allowed_by_in: Dict[Tuple[int, int], List[Tuple[int, int]]]
     trees: List[List[int]]             # robust spanning trees (channel lists)
+    _sg: Optional[StateGraph] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def is_allowed(self, cin, v0, cout, v1) -> bool:
         return ((cin, v0), (cout, v1)) in self.allowed
 
-
-def _state(c: int, v: int, n_vc: int) -> int:
-    return c * n_vc + v
+    def state_graph(self) -> StateGraph:
+        """Packed CSR of ``allowed`` (built once, then cached)."""
+        if self._sg is None:
+            self._sg = _build_state_graph(self)
+        return self._sg
 
 
 def spanning_tree_channels(topo: Topology, ch: Channels, root: int,
                            forbidden_colors: Optional[set] = None,
                            rng=None) -> Tuple[List[int], set]:
     """BFS tree; returns both directions of each tree edge + used colors."""
-    adj = topo.adjacency()
     n = topo.n
     seen = np.zeros(n, bool)
     seen[root] = True
@@ -152,20 +265,22 @@ def spanning_tree_channels(topo: Topology, ch: Channels, root: int,
     forbidden = forbidden_colors or set()
     while q:
         u = q.popleft()
-        nbrs = list(adj[u])
+        outs = ch.out_of(u)
         if rng is not None:
-            rng.shuffle(nbrs)
-        for v in nbrs:
+            outs = outs.copy()
+            rng.shuffle(outs)
+        for c in outs:
+            v = int(ch.dst[c])
             if seen[v]:
                 continue
-            c = ch.index[(u, v)]
             col = int(ch.color[c])
             if col >= 0 and col in forbidden:
                 continue
             seen[v] = True
-            used_colors.add(col) if col >= 0 else None
-            chans.append(c)
-            chans.append(ch.index[(v, u)])
+            if col >= 0:
+                used_colors.add(col)
+            chans.append(int(c))
+            chans.append(int(ch.rev[c]))
             q.append(v)
     if not seen.all():
         return [], used_colors
@@ -201,7 +316,6 @@ def ocs_disjoint_spanning_trees(topo: Topology, ch: Channels
 
 def _tree_turns(chans: List[int], ch: Channels) -> List[Tuple[int, int]]:
     """All non-reversing turns among a tree's channels (acyclic together)."""
-    inset = set(chans)
     by_node = defaultdict(list)
     for c in chans:
         by_node[int(ch.dst[c])].append(c)
@@ -233,45 +347,51 @@ def base_turns(ch: Channels) -> List[Tuple[int, int]]:
 def prioritize_turns(turns, mode: str, topo: Topology, ch: Channels,
                      seed: int = 0, sym_perms: Optional[np.ndarray] = None):
     """APL: by frequency over all-shortest-path sets; CPL needs a chosen
-    routing (caller re-invokes); Random: shuffled."""
+    routing (caller re-invokes); Random: shuffled.
+
+    APL counting is batched over the BFS level structure: per-source path
+    multiplicities come from level-masked sparse matrix products, and each
+    turn's frequency is one masked reduction over all sources at once
+    (the seed's per-source parent/grandparent triple loop was O(n deg^2)
+    python and dominated ``allowed_turns`` beyond ~200 nodes).
+    """
     rng = np.random.default_rng(seed)
     if mode == "random":
         turns = list(turns)
         rng.shuffle(turns)
         return turns
-    # count turn frequency across all shortest paths (APL) via BFS DAGs
+    import scipy.sparse as sp
+    from repro.core.topology import bfs_all_pairs
+    turns = list(turns)
+    if not turns:
+        return turns
     n = topo.n
-    adj = topo.adjacency()
-    freq = defaultdict(float)
-    for s in range(n):
-        dist = np.full(n, -1)
-        dist[s] = 0
-        q = deque([s])
-        parents = defaultdict(list)
-        while q:
-            u = q.popleft()
-            for v in adj[u]:
-                if dist[v] < 0:
-                    dist[v] = dist[u] + 1
-                    q.append(v)
-                if dist[v] == dist[u] + 1:
-                    parents[v].append(u)
-        # count path multiplicities through each turn
-        npaths = np.zeros(n)
-        npaths[s] = 1
-        for u in np.argsort(dist):
-            if dist[u] <= 0:
-                continue
-            for p in parents[u]:
-                npaths[u] += npaths[p]
-        for v in range(n):
-            for p in parents[v]:
-                for gp in parents[p]:
-                    cin = ch.index[(gp, p)]
-                    cout = ch.index[(p, v)]
-                    freq[(cin, cout)] += npaths[gp]
-    turns = sorted(turns, key=lambda t: -freq.get(t, 0.0))
-    return turns
+    d = bfs_all_pairs(topo)                       # (n, n) float, inf = cut
+    finite = np.isfinite(d)
+    maxd = int(d[finite].max()) if finite.any() else 0
+    adj_T = sp.csr_matrix((np.ones(ch.n, np.float64),
+                           (ch.dst.astype(np.int64),
+                            ch.src.astype(np.int64))), shape=(n, n))
+    # npaths[s, v]: shortest-path multiplicities, filled level by level
+    npaths = np.zeros((n, n))
+    npaths[np.arange(n), np.arange(n)] = 1.0
+    for lvl in range(1, maxd + 1):
+        prev = np.where(d == lvl - 1, npaths, 0.0)
+        contrib = adj_T.dot(prev.T).T             # sum over in-neighbors
+        npaths = np.where(d == lvl, contrib, npaths)
+    t = np.asarray(turns, np.int64)               # (T, 2)
+    cin, cout = t[:, 0], t[:, 1]
+    gp = ch.src[cin].astype(np.int64)
+    mid = ch.dst[cin].astype(np.int64)
+    vv = ch.dst[cout].astype(np.int64)
+    freq = np.zeros(len(t))
+    chunk = max(1, (1 << 24) // max(len(t), 1))
+    for s0 in range(0, n, chunk):
+        D = d[s0:s0 + chunk]
+        on_dag = (D[:, gp] + 1 == D[:, mid]) & (D[:, mid] + 1 == D[:, vv])
+        freq += (on_dag * npaths[s0:s0 + chunk][:, gp]).sum(axis=0)
+    order = np.argsort(-freq, kind="stable")
+    return [turns[i] for i in order]
 
 
 def allowed_turns(topo: Topology, n_vc: int = 2, priority: str = "apl",
@@ -333,21 +453,22 @@ def allowed_turns(topo: Topology, n_vc: int = 2, priority: str = "apl",
 
 
 # ---------------------------------------------------------------------------
-# Deadlock-free path enumeration + selection
+# Reference enumerator (per-source python BFS) -- kept as the equivalence
+# oracle for the array engine below; not on the hot path.
 # ---------------------------------------------------------------------------
 
 
 def shortest_path_states(at: ATResult, source: int,
                          dead_channels: Optional[set] = None):
     """BFS over (channel, vc) states from `source`; returns dist + parents
-    per state and best distance per destination node."""
-    ch = at.channels
+    per state and best distance per destination node. Reference oracle."""
     n_vc = at.n_vc
     dead = dead_channels or set()
     dist: Dict[Tuple[int, int], int] = {}
     parents: Dict[Tuple[int, int], List[Tuple[int, int]]] = defaultdict(list)
     q = deque()
     for c in at.channels.out_of(source):
+        c = int(c)
         if c in dead:
             continue
         for v in range(n_vc):
@@ -357,7 +478,6 @@ def shortest_path_states(at: ATResult, source: int,
                 q.append(st)
     while q:
         st = q.popleft()
-        c, v = st
         for (c2, v2) in at.allowed_by_in.get(st, []):
             if c2 in dead:
                 continue
@@ -374,7 +494,8 @@ def shortest_path_states(at: ATResult, source: int,
 def candidate_paths(at: ATResult, source: int, K: int = 8,
                     dead_channels: Optional[set] = None
                     ) -> Dict[int, List[Tuple[int, ...]]]:
-    """Up to K shortest deadlock-free channel-paths per destination."""
+    """Up to K shortest deadlock-free channel-paths per destination.
+    Reference oracle (per-source python DFS over the parent DAG)."""
     ch = at.channels
     dist, parents = shortest_path_states(at, source, dead_channels)
     best: Dict[int, int] = {}
@@ -414,6 +535,201 @@ def candidate_paths(at: ATResult, source: int, K: int = 8,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Array engine: batched frontier BFS + packed candidate enumeration
+# ---------------------------------------------------------------------------
+
+
+def state_bfs(at: ATResult, sources: Sequence[int],
+              dead_channels: Optional[set] = None) -> np.ndarray:
+    """Level-synchronous BFS over (channel, vc) states, batched over
+    ``sources``. Returns ``(B, S)`` int16 distances (-1 = unreached; the
+    out-channels of each source seed at distance 1)."""
+    sg = at.state_graph()
+    ch = at.channels
+    S, n_vc = sg.n_states, at.n_vc
+    sources = np.asarray(sources, np.int64)
+    B = len(sources)
+    dead_state = np.zeros(S, bool)
+    if dead_channels:
+        dc = np.fromiter(dead_channels, np.int64, len(dead_channels))
+        dead_state[(dc[:, None] * n_vc + np.arange(n_vc)).ravel()] = True
+    dist = np.full((B, S), -1, np.int16)
+    frontier = np.zeros((B, S), bool)
+    deg = (ch.out_indptr[sources + 1] - ch.out_indptr[sources]).astype(int)
+    rows = np.repeat(np.arange(B), deg * n_vc)
+    seed_ch = np.concatenate(
+        [ch.out_of(int(s)) for s in sources]) if B else np.zeros(0, int)
+    seed_st = (seed_ch.astype(np.int64)[:, None] * n_vc
+               + np.arange(n_vc)).ravel()
+    frontier[rows, seed_st] = True
+    frontier &= ~dead_state
+    level = 1
+    while frontier.any():
+        dist[frontier] = level
+        nxt = sg.fwd_T.dot(frontier.T.astype(np.float32)) > 0
+        frontier = nxt.T & (dist < 0) & ~dead_state
+        level += 1
+        if level > S:                        # defensive: cannot recur
+            break
+    return dist
+
+
+def node_distances(at: ATResult, sources: Sequence[int],
+                   dead_channels: Optional[set] = None,
+                   dist: Optional[np.ndarray] = None) -> np.ndarray:
+    """``(B, n)`` shortest deadlock-free hop distance from each source to
+    every node: min over that node's arrival states. -1 = unreachable,
+    0 = self. Matches the reference enumerator's distances exactly."""
+    sg = at.state_graph()
+    if dist is None:
+        dist = state_bfs(at, sources, dead_channels)
+    B = dist.shape[0]
+    UNREACH = np.int32(sg.n_states + 1)
+    dd = np.where(dist < 0, UNREACH, dist.astype(np.int32))[:, sg.node_order]
+    best = np.minimum.reduceat(dd, sg.node_starts[:-1], axis=1)
+    empty = sg.node_starts[:-1] == sg.node_starts[1:]
+    best[:, empty] = UNREACH
+    best = np.where(best >= UNREACH, -1, best)
+    best[np.arange(B), np.asarray(sources, np.int64)] = 0
+    return best
+
+
+@dataclasses.dataclass
+class CandidateSet:
+    """Packed shortest-path candidates: ``chan``/``vc`` are ``(F, K, L)``
+    (``L`` = longest shortest path this round; channels SEN-padded with
+    ``n_ch``), ``length[f]`` is every candidate's hop count (all candidates
+    of a flow are shortest), ``k_valid`` masks deduplicated slots."""
+    flow_src: np.ndarray
+    flow_dst: np.ndarray
+    chan: np.ndarray
+    vc: np.ndarray
+    length: np.ndarray
+    k_valid: np.ndarray
+    n_ch: int
+    unreachable: int
+
+
+def enumerate_candidates(at: ATResult, K: int = 8,
+                         dead_channels: Optional[set] = None,
+                         source_chunk: int = 64) -> CandidateSet:
+    """Packed ``(F, K, L)`` candidate tensor for all (src, dst) pairs via
+    the batched state BFS + a vectorised backward parent walk."""
+    ch = at.channels
+    sg = at.state_graph()
+    n, n_vc = ch.n_nodes, at.n_vc
+    SEN = ch.n
+    S = sg.n_states
+    pieces: List[Tuple] = []
+    unreachable = 0
+    width = 1
+    for s0 in range(0, n, source_chunk):
+        srcs = np.arange(s0, min(s0 + source_chunk, n))
+        dist = state_bfs(at, srcs, dead_channels)
+        best = node_distances(at, srcs, dist=dist)           # (B, n)
+        unreachable += int((best < 0).sum())
+        fb, fd = np.nonzero(best > 0)
+        if not len(fb):
+            continue
+        flen = best[fb, fd].astype(np.int64)                 # (F_c,)
+        Lmax = int(flen.max())
+        if Lmax > MAXHOP:
+            raise ValueError(f"shortest path of {Lmax} hops exceeds "
+                             f"MAXHOP={MAXHOP}")
+        # arrival states achieving the per-destination best distance
+        tgt = best[:, sg.dst_node]                           # (B, S)
+        bb, st = np.nonzero((dist == tgt) & (dist > 0))
+        key = bb * n + sg.dst_node[st]
+        grp = np.argsort(key, kind="stable")
+        st_sorted, key_sorted = st[grp], key[grp]
+        fkey = fb * n + fd                                   # ascending
+        off = np.searchsorted(key_sorted, fkey)
+        cnt = np.searchsorted(key_sorted, fkey, side="right") - off
+        # K walkers per flow, round-robin over end states; each walker's
+        # mixed-radix code picks parents so distinct codes -> distinct
+        # paths. Raw codes always favour parent 0, which correlates every
+        # flow's candidates onto the same low-id channels and skews the
+        # loads the selector has to balance -- so both the end-state
+        # round-robin and each parent digit are rotated by a hash of
+        # (flow, decision point). Walkers of one flow at the same decision
+        # point share the rotation, so distinctness is unaffected.
+        ks = np.arange(K)
+        fhash = ((srcs[fb].astype(np.uint64) * np.uint64(0x9E3779B1)
+                  + fd.astype(np.uint64) * np.uint64(0x85EBCA77))
+                 >> np.uint64(7))
+        start = st_sorted[off[:, None]
+                          + ((ks[None, :] + fhash[:, None]) % cnt[:, None])
+                          .astype(np.int64)]
+        code = (ks[None, :] // cnt[:, None]).astype(np.int64).ravel()
+        cur = start.ravel().astype(np.int64)
+        W = len(cur)
+        wrow = np.repeat(fb, K)
+        wlen = np.repeat(flen, K)
+        whash = np.repeat(fhash, K)
+        chan_buf = np.full((W, Lmax), SEN, np.int32)
+        vc_buf = np.zeros((W, Lmax), np.int8)
+        chan_buf[np.arange(W), wlen - 1] = cur // n_vc
+        vc_buf[np.arange(W), wlen - 1] = (cur % n_vc).astype(np.int8)
+        for lvl in range(Lmax, 1, -1):
+            act = np.nonzero(wlen >= lvl)[0]
+            par = sg.rev_pad[cur[act]].astype(np.int64)      # (A, D)
+            ok = (par >= 0) & (dist[wrow[act][:, None],
+                                    np.clip(par, 0, S - 1)] == lvl - 1)
+            npar = ok.sum(axis=1)                            # >= 1 (BFS)
+            rot = ((whash[act] + cur[act].astype(np.uint64)
+                    * np.uint64(0x9E3779B9)
+                    + np.uint64(lvl) * np.uint64(0xC2B2AE35))
+                   % npar.astype(np.uint64)).astype(np.int64)
+            pick = (code[act] + rot) % npar
+            code[act] //= npar
+            sel = ok & (np.cumsum(ok, axis=1) == (pick + 1)[:, None])
+            cur[act] = par[np.arange(len(act)), sel.argmax(axis=1)]
+            chan_buf[act, lvl - 2] = (cur[act] // n_vc).astype(np.int32)
+            vc_buf[act, lvl - 2] = (cur[act] % n_vc).astype(np.int8)
+        # dedupe within each flow's K slots (64-bit polynomial path hash;
+        # padding is identical across a flow's slots so it cancels out)
+        h = np.zeros(W, np.uint64)
+        mul = np.uint64(0x9E3779B97F4A7C15)
+        for pos in range(Lmax):
+            stcol = (chan_buf[:, pos].astype(np.uint64) * np.uint64(n_vc)
+                     + vc_buf[:, pos].astype(np.uint64))
+            h = h * mul + stcol + np.uint64(1)
+        hh = h.reshape(-1, K)
+        k_valid = np.ones(hh.shape, bool)
+        for k in range(1, K):
+            k_valid[:, k] &= ~(hh[:, k:k + 1] == hh[:, :k]).any(axis=1)
+        pieces.append((srcs[fb], fd, chan_buf.reshape(-1, K, Lmax),
+                       vc_buf.reshape(-1, K, Lmax), flen, k_valid))
+        width = max(width, Lmax)
+    if not pieces:
+        z = np.zeros(0, np.int64)
+        return CandidateSet(z, z, np.full((0, K, width), SEN, np.int32),
+                            np.zeros((0, K, width), np.int8), z,
+                            np.zeros((0, K), bool), SEN, unreachable)
+
+    def pad(a, fill, dt):
+        if a.shape[2] == width:
+            return a
+        out = np.full(a.shape[:2] + (width,), fill, dt)
+        out[:, :, :a.shape[2]] = a
+        return out
+
+    return CandidateSet(
+        np.concatenate([p[0] for p in pieces]).astype(np.int64),
+        np.concatenate([p[1] for p in pieces]).astype(np.int64),
+        np.concatenate([pad(p[2], SEN, np.int32) for p in pieces]),
+        np.concatenate([pad(p[3], 0, np.int8) for p in pieces]),
+        np.concatenate([p[4] for p in pieces]),
+        np.concatenate([p[5] for p in pieces]),
+        SEN, unreachable)
+
+
+# ---------------------------------------------------------------------------
+# Min-max channel-load path selection
+# ---------------------------------------------------------------------------
+
+
 @dataclasses.dataclass
 class RoutingResult:
     table: PathTable                                # packed (s, d) routes
@@ -431,18 +747,188 @@ class RoutingResult:
 
 def select_paths(at: ATResult, K: int = 8, seed: int = 0,
                  dead_channels: Optional[set] = None,
-                 local_search_rounds: int = 3) -> RoutingResult:
+                 local_search_rounds: int = 3,
+                 engine: str = "array", block: int = 1024) -> RoutingResult:
     """Min-max channel load selection: greedy + local search (the paper
     solves an ILP with Gurobi; we report the achieved L_max against the
     lower bound so the optimality gap is visible).
 
-    Candidates are packed into flat ``(F, K, MAXHOP)`` arrays as they are
-    enumerated; cost evaluation (max / sum of channel loads over each
-    candidate) is a vectorised numpy gather, and the result is written
-    straight into a :class:`PathTable` -- no per-pair dicts anywhere.
+    ``engine="array"`` (default) runs the batched state-CSR pipeline:
+    candidates come from :func:`enumerate_candidates` and cost evaluation
+    is blocked over whole flow groups -- the greedy pass gathers channel
+    loads for ``block`` flows at once, and local search re-evaluates
+    blocks with each flow's own contribution removed exactly. The winning
+    candidate's per-hop VCs (from its BFS state path) are written into the
+    table alongside the channels. ``engine="reference"`` is the seed's
+    per-flow python loop, kept as the equivalence/benchmark oracle.
     """
+    if engine == "reference":
+        return _select_paths_reference(at, K=K, seed=seed,
+                                       dead_channels=dead_channels,
+                                       local_search_rounds=local_search_rounds)
+    cs = enumerate_candidates(at, K=K, dead_channels=dead_channels)
+    return _select_array(at, cs, seed=seed,
+                         local_search_rounds=local_search_rounds, block=block)
+
+
+def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
+                  local_search_rounds: int = 3,
+                  block: int = 1024) -> RoutingResult:
     ch = at.channels
-    n = int(max(ch.src.max(), ch.dst.max())) + 1
+    n = ch.n_nodes
+    SEN = cs.n_ch
+    table = PathTable.empty(n, ch.n, at.n_vc)
+    F, K, L = cs.chan.shape
+    if F == 0:
+        return RoutingResult(table, np.zeros(ch.n), 0.0, 0.0,
+                             cs.unreachable)
+    cand = cs.chan
+    loads = np.zeros(SEN + 1, np.int64)
+    BIG = np.int64(F) * L + 1
+    INF = np.iinfo(np.int64).max
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(F)
+    chosen = np.zeros(F, np.int64)
+    ar = np.arange
+
+    # greedy pass: whole flow blocks against the running load vector
+    for i in range(0, F, block):
+        b = order[i:i + block]
+        l = loads[cand[b]]                                   # (B, K, L)
+        cost = l.max(axis=2) * BIG + l.sum(axis=2)
+        cost[~cs.k_valid[b]] = INF
+        c = cost.argmin(axis=1)
+        chosen[b] = c
+        np.add.at(loads, cand[b, c].ravel(), 1)
+        loads[SEN] = 0
+
+    # local search: block-parallel re-assignment with exact own-load
+    # removal (candidate loads minus the flow's current path multiplicity)
+    for _ in range(local_search_rounds):
+        changed = 0
+        for i in range(0, F, block):
+            b = order[i:i + block]
+            B = len(b)
+            bc = cand[b]                                     # (B, K, L)
+            cur = bc[ar(B), chosen[b]]                       # (B, L)
+            ladj = loads[bc] - (bc[:, :, :, None]
+                                == cur[:, None, None, :]).sum(axis=3)
+            ladj = np.where(bc == SEN, 0, ladj)
+            cost = ladj.max(axis=2) * BIG + ladj.sum(axis=2)
+            cost[~cs.k_valid[b]] = INF
+            newc = cost.argmin(axis=1)
+            better = cost[ar(B), newc] < cost[ar(B), chosen[b]]
+            if better.any():
+                mv = np.nonzero(better)[0]
+                np.add.at(loads, cur[mv].ravel(), -1)
+                np.add.at(loads, bc[mv, newc[mv]].ravel(), 1)
+                loads[SEN] = 0
+                chosen[b[mv]] = newc[mv]
+                changed += len(mv)
+        if changed == 0:
+            break
+
+    # hot-set peel: vectorised replacement for the reference's sequential
+    # hot-channel walk. Each round takes every flow crossing a channel at
+    # the current max load and moves the ones with a *safe* alternative --
+    # a candidate whose own-removed loads all sit <= max - 2, so a single
+    # move can never mint a new max. Concurrent accepted moves can still
+    # collide on an lmax-2 channel, so the best (loads, chosen) snapshot
+    # by achieved l_max is kept and restored at the end.
+    best_snap = (loads.copy(), chosen.copy(), loads[:SEN].max())
+    stall = 0
+    for _ in range(0 if local_search_rounds == 0 else 64):
+        lm = int(loads[:SEN].max())
+        if lm <= 1:
+            break
+        hot_mask = np.zeros(SEN + 1, bool)
+        hot_mask[:SEN][loads[:SEN] == lm] = True
+        sel = cand[ar(F), chosen]
+        hf = np.nonzero(hot_mask[sel].any(axis=1))[0]
+        bc = cand[hf]                                        # (H, K, L)
+        cur = sel[hf]
+        ladj = loads[bc] - (bc[:, :, :, None]
+                            == cur[:, None, None, :]).sum(axis=3)
+        ladj = np.where(bc == SEN, 0, ladj)
+        safe = (ladj <= lm - 2).all(axis=2) & cs.k_valid[hf]
+        cost = ladj.max(axis=2) * BIG + ladj.sum(axis=2)
+        cost[~safe] = INF
+        newc = cost.argmin(axis=1)
+        mv = np.nonzero(safe[ar(len(hf)), newc])[0]
+        if len(mv) == 0:
+            break
+        np.add.at(loads, cur[mv].ravel(), -1)
+        np.add.at(loads, bc[mv, newc[mv]].ravel(), 1)
+        loads[SEN] = 0
+        chosen[hf[mv]] = newc[mv]
+        lm_now = loads[:SEN].max()
+        if lm_now < best_snap[2]:
+            best_snap = (loads.copy(), chosen.copy(), lm_now)
+            stall = 0
+        else:
+            stall += 1
+            if stall >= 4:
+                break
+    if best_snap[2] < loads[:SEN].max():
+        loads, chosen = best_snap[0], best_snap[1]
+
+    # final sequential hot-channel walk (the reference's exact move rule):
+    # the peel above leaves only moves that require cascading through
+    # lmax-1 channels, which are few -- a handful of cheap rounds. Rounds
+    # stop once l_max stops dropping (plateau churn still counts as
+    # "improved" under the reference rule, so a stall counter bounds it).
+    stall = 0
+    best_walk = int(loads[:SEN].max())
+    for _ in range(0 if local_search_rounds == 0 else 24):
+        improved = False
+        hot = int(np.argmax(loads[:SEN]))
+        hot_flows = np.nonzero(
+            (cand[ar(F), chosen] == hot).any(axis=1))[0]
+        rng.shuffle(hot_flows)
+        for f in hot_flows:
+            np.add.at(loads, cand[f, chosen[f]], -1)
+            loads[SEN] = 0
+            l = loads[cand[f]]
+            cost = l.max(axis=1) * BIG + l.sum(axis=1)
+            cost = np.where(cs.k_valid[f], cost, INF)
+            best = int(np.argmin(cost))
+            if cost[best] >= cost[chosen[f]]:
+                best = int(chosen[f])
+            if best != chosen[f]:
+                improved = True
+            chosen[f] = best
+            np.add.at(loads, cand[f, best], 1)
+            loads[SEN] = 0
+            if loads[:SEN].max() < loads[hot]:
+                break
+        lm_now = int(loads[:SEN].max())
+        if lm_now < best_walk:
+            best_walk, stall = lm_now, 0
+        else:
+            stall += 1
+        if not improved or stall >= 6:
+            break
+
+    sel = cand[ar(F), chosen]
+    selvc = cs.vc[ar(F), chosen]
+    table.set_paths_batch(cs.flow_src, cs.flow_dst,
+                          np.where(sel == SEN, -1, sel),
+                          cs.length.astype(np.int32), vcs=selvc)
+    loads_final = loads[:SEN].astype(np.float64)
+    return RoutingResult(table, loads_final,
+                         float(loads_final.max()) if F else 0.0,
+                         float(cs.length.mean()) if F else 0.0,
+                         cs.unreachable)
+
+
+def _select_paths_reference(at: ATResult, K: int = 8, seed: int = 0,
+                            dead_channels: Optional[set] = None,
+                            local_search_rounds: int = 3) -> RoutingResult:
+    """The seed's per-flow python greedy + hot-channel local search, driven
+    by the per-source python BFS enumerator. Equivalence/benchmark oracle
+    for the array engine."""
+    ch = at.channels
+    n = ch.n_nodes
     SEN = ch.n                      # sentinel channel id; its load stays 0
     f_cap = n * (n - 1)
     cand = np.full((f_cap, K, MAXHOP), SEN, np.int32)

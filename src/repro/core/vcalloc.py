@@ -1,14 +1,18 @@
 """VC allocation along chosen paths (paper Section 5.4).
 
-Each selected channel-path gets a per-hop VC assignment found by search
-over the allowed-turn CDG. The naive policy biases VC 0; TONS's online
-load balancer marks the VC with the lowest accumulated hop count as
-"priority" before each path and tries it first at every hop.
+Each selected channel-path gets a per-hop VC assignment found over the
+allowed-turn CDG. The naive policy biases VC 0; TONS's online load
+balancer marks the VC with the lowest accumulated hop count as "priority"
+before each path and tries it first at every hop.
 
-Assignments are written directly into the packed ``PathTable.vcs`` array
-(the same structure the simulator consumes); per-VC hop counts come back
-as a vector. Dict-based inputs are not accepted -- convert at the edge
-with :meth:`PathTable.from_dicts` if needed.
+Assignment is vectorised over flow blocks: every hop of a whole block is
+resolved with batched membership tests against the sorted edge keys of the
+:class:`~repro.core.routing.StateGraph` (first-fit in priority order, the
+same per-hop rule as the reference DFS); the rare flow whose greedy prefix
+dead-ends falls back to the per-flow DFS. Assignments are written directly
+into the packed ``PathTable.vcs`` array (the structure the simulator
+consumes); per-VC hop counts come back as a vector. Dict-based inputs are
+not accepted -- convert at the edge with :meth:`PathTable.from_dicts`.
 """
 from __future__ import annotations
 
@@ -16,13 +20,14 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.core.pathtable import PathTable
+from repro.core.pathtable import MAXHOP, PathTable
 from repro.core.routing import ATResult
 
 
 def _assign_path(at: ATResult, path, priority: int) -> Optional[List[int]]:
     """DFS over VC choices along a fixed channel sequence; tries the
-    priority VC first at every hop."""
+    priority VC first at every hop. Reference / fallback for the
+    vectorised block assignment."""
     n_vc = at.n_vc
     order = [priority] + [v for v in range(n_vc) if v != priority]
 
@@ -39,37 +44,79 @@ def _assign_path(at: ATResult, path, priority: int) -> Optional[List[int]]:
     return rec(0, -1)
 
 
-def allocate_vcs(at: ATResult, table: PathTable,
-                 balance: bool = True) -> np.ndarray:
+def allocate_vcs(at: ATResult, table: PathTable, balance: bool = True,
+                 block: Optional[int] = None) -> np.ndarray:
     """Fill ``table.vcs`` in place for every routed pair; returns the
-    hops-per-VC counts ``(n_vc,)``."""
-    counts = np.zeros(at.n_vc, dtype=np.int64)
+    hops-per-VC counts ``(n_vc,)``.
+
+    Flows are processed in blocks (row-major ``(s, d)`` order, as before);
+    the priority VC is re-derived from the accumulated counts between
+    blocks, so balancing tracks the reference policy at block granularity
+    while every per-hop choice is one vectorised edge-membership test.
+    """
+    sg = at.state_graph()
+    n_vc = at.n_vc
+    counts = np.zeros(n_vc, dtype=np.int64)
     ss, dd = np.nonzero(table.hops > 0)      # row-major == sorted (s, d)
-    for s, d in zip(ss.tolist(), dd.tolist()):
-        L = int(table.hops[s, d])
-        path = [int(c) for c in table.path[s, d, :L]]
+    F = len(ss)
+    if F == 0:
+        return counts
+    if block is None:
+        block = max(64, F // 64) if balance else F
+    for i in range(0, F, block):
+        sb, db = ss[i:i + block], dd[i:i + block]
+        B = len(sb)
+        lens = table.hops[sb, db].astype(np.int64)
+        Lmax = int(lens.max())
+        P = table.path[sb, db, :Lmax].astype(np.int64)
         pr = int(np.argmin(counts)) if balance else 0
-        vcs = _assign_path(at, path, pr)
-        if vcs is None:  # should not happen: paths came from the state BFS
-            vcs = _assign_path(at, path, 0)
-        if vcs is None:
-            raise RuntimeError(f"path {(s, d)} has no valid VC assignment")
-        table.vcs[s, d, :L] = vcs
-        counts += np.bincount(vcs, minlength=at.n_vc)
+        vorder = [pr] + [v for v in range(n_vc) if v != pr]
+        V = np.full((B, Lmax), -1, np.int64)
+        V[:, 0] = pr                       # hop 0 is unconstrained
+        okflow = np.ones(B, bool)
+        for h in range(1, Lmax):
+            live = okflow & (lens > h)
+            if not live.any():
+                break
+            prev_state = P[:, h - 1] * n_vc + V[:, h - 1]
+            assigned = np.zeros(B, bool)
+            for v in vorder:
+                need = live & ~assigned
+                if not need.any():
+                    break
+                ok = need & sg.has_edges(prev_state, P[:, h] * n_vc + v)
+                V[ok, h] = v
+                assigned |= ok
+            okflow &= assigned | ~live
+        for fi in np.nonzero(~okflow)[0]:  # greedy dead-end: full DFS
+            path = [int(c) for c in P[fi, :lens[fi]]]
+            vcs = _assign_path(at, path, pr)
+            if vcs is None:
+                vcs = _assign_path(at, path, 0)
+            if vcs is None:
+                raise RuntimeError(f"path {(int(sb[fi]), int(db[fi]))} has "
+                                   f"no valid VC assignment")
+            V[fi, :lens[fi]] = vcs
+        live = np.arange(Lmax)[None, :] < lens[:, None]
+        table.vcs[sb, db, :Lmax] = np.where(live, V, 0).astype(np.int8)
+        counts += np.bincount(V[live], minlength=n_vc)
     return counts
 
 
 def verify_deadlock_free(at: ATResult, table: PathTable) -> bool:
     """Invariant check: every consecutive (channel, vc) hop of every routed
     flow is an allowed turn => the union of dependencies is a subgraph of
-    the acyclic allowed-turn CDG => deadlock-free."""
+    the acyclic allowed-turn CDG => deadlock-free. One batched membership
+    test over every hop pair of every flow."""
+    sg = at.state_graph()
+    n_vc = at.n_vc
     ss, dd = np.nonzero(table.hops > 1)
-    for s, d in zip(ss.tolist(), dd.tolist()):
-        L = int(table.hops[s, d])
-        p = table.path[s, d, :L]
-        v = table.vcs[s, d, :L]
-        for i in range(1, L):
-            if not at.is_allowed(int(p[i - 1]), int(v[i - 1]),
-                                 int(p[i]), int(v[i])):
-                return False
-    return True
+    if len(ss) == 0:
+        return True
+    P = table.path[ss, dd].astype(np.int64)
+    V = table.vcs[ss, dd].astype(np.int64)
+    pair_ok = (np.arange(MAXHOP - 1)[None, :]
+               < table.hops[ss, dd][:, None] - 1)
+    a = (P[:, :-1] * n_vc + V[:, :-1])[pair_ok]
+    b = (P[:, 1:] * n_vc + V[:, 1:])[pair_ok]
+    return bool(sg.has_edges(a, b).all())

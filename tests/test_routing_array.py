@@ -1,0 +1,227 @@
+"""Equivalence suite: array state-CSR routing engine vs the reference
+per-source python enumerator (kept as ``engine="reference"``), plus the
+vectorised satellites (out-CSR, APL counting, VC allocation)."""
+from collections import defaultdict, deque
+
+import numpy as np
+import pytest
+
+from repro.core import fault as F, netsim as NS, routing as R, \
+    topology as T, vcalloc as V
+
+
+@pytest.fixture(scope="module", params=[(4, 4, 4), (4, 4, 8)])
+def pod_at(request):
+    topo = T.pt(request.param)
+    at = R.allowed_turns(topo, n_vc=2, priority="apl")
+    return topo, at
+
+
+def _reference_node_distances(at, source, dead=None):
+    """Per-destination best distance from the reference state BFS."""
+    ch = at.channels
+    dist, _ = R.shortest_path_states(at, source, dead_channels=dead)
+    best = {}
+    for (c, v), d in dist.items():
+        node = int(ch.dst[c])
+        if node != source:
+            best[node] = min(best.get(node, 1 << 30), d)
+    return best
+
+
+def test_out_csr_matches_scan(pod_at):
+    topo, at = pod_at
+    ch = at.channels
+    for node in range(0, topo.n, 7):
+        csr = sorted(int(c) for c in ch.out_of(node))
+        scan = sorted(np.nonzero(ch.src == node)[0].tolist())
+        assert csr == scan
+    # reverse-channel array: rev[c] is the opposite direction of c
+    assert (ch.src[ch.rev] == ch.dst).all()
+    assert (ch.dst[ch.rev] == ch.src).all()
+
+
+def test_array_bfs_distances_match_reference_exactly(pod_at):
+    topo, at = pod_at
+    srcs = np.arange(topo.n)
+    best = R.node_distances(at, srcs)
+    assert (best[srcs, srcs] == 0).all()
+    for s in range(0, topo.n, 5):
+        ref = _reference_node_distances(at, s)
+        for d in range(topo.n):
+            if d == s:
+                continue
+            assert int(best[s, d]) == ref.get(d, -1), (s, d)
+
+
+def test_array_bfs_distances_match_reference_under_fault(pod_at):
+    topo, at = pod_at
+    color = F.colors_in_use(topo)[0]
+    dead = F.dead_channels_for_color(at, color)
+    srcs = np.arange(0, topo.n, 3)
+    best = R.node_distances(at, srcs, dead_channels=dead)
+    for i, s in enumerate(srcs.tolist()):
+        ref = _reference_node_distances(at, s, dead=dead)
+        for d in range(topo.n):
+            if d == s:
+                continue
+            assert int(best[i, d]) == ref.get(d, -1), (s, d)
+
+
+def test_candidates_are_valid_distinct_shortest(pod_at):
+    topo, at = pod_at
+    cs = R.enumerate_candidates(at, K=4)
+    sg = at.state_graph()
+    ch = at.channels
+    n_vc = at.n_vc
+    assert cs.unreachable == 0
+    assert len(cs.flow_src) == topo.n * (topo.n - 1)
+    kv = cs.k_valid
+    assert (kv[:, 0]).all() and kv.sum(axis=1).min() >= 1
+    F_, K, L = cs.chan.shape
+    # every valid candidate: connected channel sequence from src to dst
+    # whose consecutive (channel, vc) hops are allowed turns
+    fi, ki = np.nonzero(kv)
+    lens = cs.length[fi]
+    chanp = cs.chan[fi, ki]
+    vcp = cs.vc[fi, ki].astype(np.int64)
+    first = chanp[:, 0]
+    last = chanp[np.arange(len(fi)), lens - 1]
+    assert (ch.src[first] == cs.flow_src[fi]).all()
+    assert (ch.dst[last] == cs.flow_dst[fi]).all()
+    pair = np.arange(L - 1)[None, :] < (lens - 1)[:, None]
+    a = (chanp[:, :-1].astype(np.int64) * n_vc + vcp[:, :-1])[pair]
+    b = (chanp[:, 1:].astype(np.int64) * n_vc + vcp[:, 1:])[pair]
+    assert sg.has_edges(a, b).all()
+    hop_ok = np.arange(L)[None, :] < lens[:, None]
+    assert (ch.dst[chanp[:, :-1][pair]] == ch.src[chanp[:, 1:][pair]]).all()
+    assert (chanp[~hop_ok] == cs.n_ch).all(), "padding must be SEN"
+    # shortest: lengths equal the reference best distance
+    best = R.node_distances(at, np.arange(topo.n))
+    assert (cs.length == best[cs.flow_src, cs.flow_dst]).all()
+    # distinct within each flow (state-sequence comparison)
+    states = cs.chan.astype(np.int64) * n_vc + cs.vc
+    for f in range(0, F_, 97):
+        seen = set()
+        for k in range(K):
+            if not kv[f, k]:
+                continue
+            key = tuple(states[f, k, :cs.length[f]].tolist())
+            assert key not in seen
+            seen.add(key)
+
+
+def test_select_paths_quality_and_stats_vs_reference(pod_at):
+    topo, at = pod_at
+    ref = R.select_paths(at, K=4, local_search_rounds=2,
+                         engine="reference")
+    arr = R.select_paths(at, K=4, local_search_rounds=2, engine="array")
+    assert arr.unreachable == 0 and ref.unreachable == 0
+    assert arr.table.n_routed() == topo.n * (topo.n - 1)
+    # same shortest lengths => identical average hops
+    assert abs(arr.avg_hops - ref.avg_hops) < 1e-12
+    # min-max quality: within 5% of the reference (usually better)
+    assert arr.l_max <= ref.l_max * 1.05, (arr.l_max, ref.l_max)
+    # loads accounting consistent with the emitted table
+    np.testing.assert_array_equal(arr.loads, arr.table.loads())
+
+
+def test_select_paths_emits_valid_vcs(pod_at):
+    """The array engine writes each winning candidate's BFS state-path
+    VCs into the table; they must already be deadlock-free, and
+    ``at_tables(balance=None)`` may consume them without re-allocation."""
+    topo, at = pod_at
+    arr = R.select_paths(at, K=4, local_search_rounds=1, engine="array")
+    assert V.verify_deadlock_free(at, arr.table)
+    tab = NS.at_tables(topo, at, arr, balance=None)
+    assert V.verify_deadlock_free(at, tab.table)
+    np.testing.assert_array_equal(tab.table.vcs, arr.table.vcs)
+    r = NS.run(tab, 0.02, cycles=600, warmup=200)
+    assert r["injected_total"] == r["consumed_total"] + r["in_flight"]
+    assert r["delivered"] > 0
+
+
+def test_select_paths_array_under_fault(pod_at):
+    topo, at = pod_at
+    color = F.colors_in_use(topo)[0]
+    dead = F.dead_channels_for_color(at, color)
+    ref = R.select_paths(at, K=4, local_search_rounds=1,
+                         dead_channels=dead, engine="reference")
+    arr = R.select_paths(at, K=4, local_search_rounds=1,
+                         dead_channels=dead, engine="array")
+    assert arr.unreachable == ref.unreachable
+    assert abs(arr.avg_hops - ref.avg_hops) < 1e-12
+    assert arr.l_max <= ref.l_max * 1.05
+    # dead channels never appear in routed paths
+    deadarr = np.fromiter(dead, np.int64, len(dead))
+    assert not np.isin(arr.table.path, deadarr).any()
+
+
+def test_vectorized_vcalloc_matches_reference_policy(pod_at):
+    topo, at = pod_at
+    arr = R.select_paths(at, K=4, local_search_rounds=1, engine="array")
+    bal = arr.table.copy()
+    counts = V.allocate_vcs(at, bal, balance=True)
+    assert V.verify_deadlock_free(at, bal)
+    assert (counts == bal.vc_hop_counts()).all()
+    ratio = counts.max() / max(counts.min(), 1)
+    assert ratio < 1.2, f"VC imbalance {counts}"
+    unbal = V.allocate_vcs(at, arr.table.copy(), balance=False)
+    assert unbal[0] > unbal[1], "naive policy should bias VC0"
+
+
+def test_prioritize_turns_apl_matches_python_oracle():
+    """The batched level-DAG APL counting reproduces the seed's
+    per-source triple-loop frequencies (and therefore its ordering)."""
+    topo = T.pt((4, 4, 4))
+    ch = R.Channels.from_topology(topo)
+    turns = R.base_turns(ch)
+    # --- seed implementation (python triple loop), verbatim ---
+    n = topo.n
+    adj = topo.adjacency()
+    freq = defaultdict(float)
+    for s in range(n):
+        dist = np.full(n, -1)
+        dist[s] = 0
+        q = deque([s])
+        parents = defaultdict(list)
+        while q:
+            u = q.popleft()
+            for v in adj[u]:
+                if dist[v] < 0:
+                    dist[v] = dist[u] + 1
+                    q.append(v)
+                if dist[v] == dist[u] + 1:
+                    parents[v].append(u)
+        npaths = np.zeros(n)
+        npaths[s] = 1
+        for u in np.argsort(dist):
+            if dist[u] <= 0:
+                continue
+            for p in parents[u]:
+                npaths[u] += npaths[p]
+        for v in range(n):
+            for p in parents[v]:
+                for gp in parents[p]:
+                    cin = ch.index[(gp, p)]
+                    cout = ch.index[(p, v)]
+                    freq[(cin, cout)] += npaths[gp]
+    oracle = sorted(turns, key=lambda t: -freq.get(t, 0.0))
+    got = R.prioritize_turns(turns, "apl", topo, ch)
+    assert got == oracle
+
+
+@pytest.mark.slow
+def test_8cube_pod_routes_end_to_end():
+    """512-chip pod through the full chain: allowed turns -> array BFS ->
+    selection -> VC allocation -> simulator tables."""
+    topo = T.pt((8, 8, 8))
+    at = R.allowed_turns(topo, n_vc=2, priority="apl")
+    routed = R.select_paths(at, K=4, local_search_rounds=1)
+    assert routed.unreachable == 0
+    assert routed.table.n_routed() == topo.n * (topo.n - 1)
+    tab = NS.at_tables(topo, at, routed)
+    assert V.verify_deadlock_free(at, tab.table)
+    assert tab.n == 512 and tab.table.hops.max() <= 40
+    # quality sanity: within 2x of the flow-balance lower bound
+    assert routed.l_max <= 2 * R.load_lower_bound(topo)
