@@ -1,19 +1,28 @@
-"""Routing-engine perf tracking: array state-CSR pipeline vs the seed's
-per-source python BFS + per-flow greedy (kept as ``engine="reference"``).
+"""Routing-engine perf tracking: array state-CSR pipeline + batched
+allowed-turns admission vs the seed's per-source python BFS / serial
+Pearce-Kelly (kept as ``engine="reference"`` / ``at_engine="reference"``).
 
-Measures, on PT pods of 64 / 256 / 512 chips (4^3 / 4x8x8 / 8^3):
+Measures, on PT pods of 64 / 256 / 512 chips (4^3 / 4x8x8 / 8^3), plus an
+opt-in 1728-chip 12^3 pod under ``--full``:
 
+- wall-clock of the allowed-turns construction for both AT engines (the
+  serial reference is skipped above ``REF_CAP`` nodes in quick mode;
+  ``--full`` extends the comparison and the exact-set equivalence assert
+  up to the 512-chip pod -- at 12^3 the serial reference takes many
+  minutes, so only the batched engine runs there),
+  with the batched engine's admission breakdown (admitted per block,
+  forward/bulk vs tangle-replayed commits, BFS rows, conflict blocks);
 - wall-clock of candidate enumeration + min-max path selection for both
-  engines (the reference is skipped above ``REF_CAP`` nodes unless
-  ``--full`` -- it is minutes-slow there, which is the point);
-- achieved L_max of both (the array engine must stay within a few % --
-  it usually wins);
-- the full 8^3 end-to-end chain: allowed turns -> candidate enumeration
-  -> path selection -> VC allocation -> simulator tables.
+  selection engines, and the achieved L_max of both;
+- the full 8^3 (and, with ``--full``, 12^3) end-to-end chain: allowed
+  turns -> candidate enumeration -> path selection -> VC allocation ->
+  simulator tables.
 
 ``--json`` (or ``main(json_path=...)``) writes BENCH_routing.json so the
 perf trajectory is tracked from PR to PR; prior results, if any, are
-loaded tolerantly and printed for comparison.
+loaded tolerantly and printed for comparison, and a regression guard
+warns when the 8^3 ``allowed_turns_s`` regresses more than 1.5x against
+the stored baseline.
 """
 from __future__ import annotations
 
@@ -28,7 +37,25 @@ sys.path.insert(0, str(Path(__file__).parent.parent))
 from benchmarks.common import emit, load_bench_json
 
 SPECS = [("n64", (4, 4, 4)), ("n256", (4, 8, 8)), ("n512", (8, 8, 8))]
-REF_CAP = 256          # largest pod the reference engine runs in quick mode
+FULL_SPECS = [("n1728", (12, 12, 12))]
+REF_CAP = 256          # largest pod the reference engines run in quick mode
+AT_REGRESSION = 1.5    # warn when 8^3 allowed_turns_s regresses past this
+
+
+def _at_breakdown(at) -> dict:
+    """Condensed admission stats of the batched allowed-turns engine."""
+    s = at.stats or {}
+    apb = s.get("admitted_per_block", [])
+    return {
+        "blocks": s.get("blocks", 0),
+        "admitted_per_block_mean": round(sum(apb) / max(len(apb), 1), 1),
+        "fwd_bulk": s.get("fwd_bulk", 0),
+        "contested_bulk": s.get("contested_bulk", 0),
+        "tangle_commits": s.get("tangle_commits", 0),
+        "bfs_rows": s.get("bfs_rows", 0),
+        "conflict_blocks": s.get("conflict_rounds", 0),
+        "scc_checks": s.get("scc_checks", 0),
+    }
 
 
 def main(full: bool = False, json_path=None) -> dict:
@@ -36,11 +63,30 @@ def main(full: bool = False, json_path=None) -> dict:
 
     prior = load_bench_json(json_path) if json_path else {}
     result: dict = {"K": 4, "local_search_rounds": 2, "sizes": {}}
-    for name, spec in SPECS:
+    # warm both engines once (scipy imports + numpy dispatch) so the
+    # recorded wall-clocks compare codepaths, not cold import order
+    warm = T.pt((4, 4, 4))
+    R.allowed_turns(warm, n_vc=2, priority="apl")
+    R.allowed_turns(warm, n_vc=2, priority="apl", at_engine="reference")
+    specs = SPECS + (FULL_SPECS if full else [])
+    for name, spec in specs:
         topo = T.pt(spec)
         t0 = time.time()
         at = R.allowed_turns(topo, n_vc=2, priority="apl")
         t_at = time.time() - t0
+        row = {
+            "pod": list(spec),
+            "allowed_turns_s": round(t_at, 3),
+            "allowed_turns": _at_breakdown(at),
+        }
+        if topo.n <= REF_CAP or (full and topo.n <= 512):
+            t0 = time.time()
+            at_ref = R.allowed_turns(topo, n_vc=2, priority="apl",
+                                     at_engine="reference")
+            t_at_ref = time.time() - t0
+            row["allowed_turns_ref_s"] = round(t_at_ref, 3)
+            row["at_speedup"] = round(t_at_ref / max(t_at, 1e-9), 2)
+            assert at.allowed == at_ref.allowed, "AT engines diverged"
         # sub-second timings at 64 chips are noisy: take best-of-3
         reps = 3 if topo.n <= 64 else 1
         t_arr = float("inf")
@@ -49,15 +95,23 @@ def main(full: bool = False, json_path=None) -> dict:
             arr = R.select_paths(at, K=4, local_search_rounds=2,
                                  engine="array")
             t_arr = min(t_arr, time.time() - t0)
-        row = {
-            "pod": list(spec),
-            "allowed_turns_s": round(t_at, 3),
+        row.update({
             "array_select_s": round(t_arr, 3),
             "array_l_max": arr.l_max,
             "avg_hops": round(arr.avg_hops, 4),
             "unreachable": arr.unreachable,
-        }
-        if topo.n <= REF_CAP or full:
+        })
+        bd = row["allowed_turns"]
+        print(f"  {name}: allowed_turns={t_at:.2f}s "
+              f"(blocks={bd['blocks']} "
+              f"admitted/block={bd['admitted_per_block_mean']:.0f} "
+              f"bulk={bd['fwd_bulk'] + bd['contested_bulk']} "
+              f"tangle={bd['tangle_commits']} "
+              f"conflicts={bd['conflict_blocks']})"
+              + (f" vs reference={row['allowed_turns_ref_s']:.2f}s "
+                 f"-> {row['at_speedup']:.1f}x"
+                 if "at_speedup" in row else ""))
+        if topo.n <= REF_CAP or (full and topo.n <= 512):
             t_ref = float("inf")
             for _ in range(reps):
                 t0 = time.time()
@@ -72,15 +126,16 @@ def main(full: bool = False, json_path=None) -> dict:
                   f"lmax {arr.l_max:.0f}/{ref.l_max:.0f}")
         else:
             print(f"  {name}: array={t_arr:.2f}s lmax={arr.l_max:.0f} "
-                  f"(reference skipped; --full runs it)")
-        if topo.n == 512:
+                  f"(reference select skipped)")
+        if topo.n >= 512:
             t0 = time.time()
             tab = NS.at_tables(topo, at, arr)
             t_tab = time.time() - t0
             row["vcalloc_tables_s"] = round(t_tab, 3)
             row["end_to_end_s"] = round(t_at + t_arr + t_tab, 3)
             print(f"  {name}: end-to-end (AT -> paths -> VC alloc -> "
-                  f"tables) = {row['end_to_end_s']:.1f}s")
+                  f"tables) = {row['end_to_end_s']:.1f}s "
+                  f"unreachable={arr.unreachable}")
         result["sizes"][name] = row
     sp = result["sizes"]["n64"].get("speedup", 0.0)
     emit("bench_routing_speedup_n64",
@@ -88,9 +143,24 @@ def main(full: bool = False, json_path=None) -> dict:
     emit("bench_routing_e2e_n512",
          result["sizes"]["n512"]["end_to_end_s"] * 1e6,
          f"lmax={result['sizes']['n512']['array_l_max']:.0f}")
+    emit("bench_routing_at_n512",
+         result["sizes"]["n512"]["allowed_turns_s"] * 1e6,
+         f"blocks={result['sizes']['n512']['allowed_turns']['blocks']}")
+    # perf-regression guard against the stored baseline
+    prior_at = prior.get("sizes", {}).get("n512", {}).get("allowed_turns_s")
+    now_at = result["sizes"]["n512"]["allowed_turns_s"]
+    if prior_at and now_at > AT_REGRESSION * prior_at:
+        print(f"  WARNING: n512 allowed_turns_s regressed "
+              f"{now_at:.2f}s vs baseline {prior_at:.2f}s "
+              f"(> {AT_REGRESSION}x)")
+        emit("bench_routing_at_regression", now_at * 1e6,
+             f"baseline={prior_at}")
     if prior.get("sizes", {}).get("n64", {}).get("speedup"):
         print(f"  prior n64 speedup: {prior['sizes']['n64']['speedup']}x")
     if json_path:
+        prior_full = prior.get("sizes", {}).get("n1728")
+        if not full and prior_full:      # keep the 12^3 record around
+            result["sizes"]["n1728"] = prior_full
         Path(json_path).write_text(json.dumps(result, indent=2) + "\n")
         print(f"  wrote {json_path}")
     return result

@@ -23,7 +23,12 @@ def main() -> None:
                     help="also write machine-readable BENCH_netsim.json "
                          "(netsim sweep wall-clock + per-pattern "
                          "saturation points) and BENCH_routing.json "
-                         "(routing-engine wall-clock at 64/256/512 chips)")
+                         "(routing-engine wall-clock at 64/256/512 chips "
+                         "incl. the batched allowed-turns admission "
+                         "breakdown and, with --full, the 1728-chip 12^3 "
+                         "end-to-end entry; regressions >1.5x on the 8^3 "
+                         "allowed_turns_s vs the stored baseline print a "
+                         "WARNING line)")
     args = ap.parse_args()
 
     from benchmarks import (bench_netsim, bench_routing, fig1_smallgraphs,

@@ -37,6 +37,35 @@ The hot path is a packed-array pipeline over *states* ``s = c * n_vc + v``
 Everything downstream (VC allocation, ``netsim.build_tables``) consumes the
 same packed :class:`~repro.core.pathtable.PathTable`; an 8^3 pod (512
 chips, ~3k channels) routes end-to-end in seconds.
+
+Batched allowed-turns admission (PR 3)
+--------------------------------------
+
+Algorithm 1 admits VC-labeled turns one at a time under an incremental
+acyclicity check; the seed ran a python Pearce-Kelly insertion per
+attempt, which made ``allowed_turns`` the front-end bottleneck past a few
+hundred nodes. :class:`_BatchedDAG` replays the same serial greedy in
+blocks and produces the *identical* allowed set:
+
+- attempts consistent with a maintained topological numbering
+  (``level``) are accepted wholesale -- a batch of forward edges can
+  never create a cycle;
+- the backward minority goes through one batched BFS over the accepted
+  CSR (level-window pruned): already-reachable heads are definite
+  rejections (sticky across both VC passes -- reachability only grows),
+  the rest are contested;
+- one SCC pass over accepted + candidates splits the contested set into
+  independent *tangles* (an edge can conflict only with candidates in
+  its own strongly connected component); everything untangled commits
+  in bulk, and each tangle is replayed through its interaction graph
+  (head-reaches-tail bitsets, built by one scatter-OR sweep over the
+  component's level bands) with an incremental transitive closure --
+  the exact dead-end fallback, still array-backed;
+- levels are repaired by a local gap-spaced relaxation confined to the
+  raised region.
+
+``at_engine="reference"`` keeps the seed loop as the equivalence oracle
+(the produced sets match bit for bit; ``tests/test_at_engine.py``).
 """
 from __future__ import annotations
 
@@ -74,6 +103,17 @@ class Channels:
 
     @staticmethod
     def from_topology(topo: Topology) -> "Channels":
+        """Build (or fetch) the channel arrays of ``topo``.
+
+        The result is cached on the topology object (topologies are
+        immutable after construction): ``allowed_turns``, the simulator
+        table builders and the collectives all start from the same
+        ``Channels``, and fault sweeps used to rebuild it from scratch on
+        every re-route.
+        """
+        cached = topo.__dict__.get("_channels")
+        if cached is not None:
+            return cached
         e = topo.edges()
         col = topo.edge_colors()
         src = np.concatenate([e[:, 0], e[:, 1]]).astype(np.int32)
@@ -87,7 +127,9 @@ class Channels:
         E = len(e)
         rev = np.concatenate([np.arange(E, 2 * E), np.arange(E)]) \
             .astype(np.int32)
-        return Channels(src, dst, color, index, out_indptr, order, rev)
+        out = Channels(src, dst, color, index, out_indptr, order, rev)
+        topo.__dict__["_channels"] = out
+        return out
 
     @property
     def n(self) -> int:
@@ -203,13 +245,21 @@ def _build_state_graph(at: "ATResult") -> StateGraph:
     ch = at.channels
     n_vc = at.n_vc
     S = ch.n * n_vc
-    if at.allowed:
+    if at._edges is not None:
+        a, b = at._edges[:, 0].astype(np.int64), at._edges[:, 1].astype(
+            np.int64)
+    elif at.allowed:
         ab = np.array([(ci * n_vc + v0, co * n_vc + v1)
                        for ((ci, v0), (co, v1)) in at.allowed], np.int64)
         a, b = ab[:, 0], ab[:, 1]
     else:
         a = b = np.zeros(0, np.int64)
-    keys = np.sort(a * S + b)
+    # canonical edge order: the padded reverse adjacency below decides
+    # which parents the candidate walkers see first, so both admission
+    # engines (any insertion order) must compile to the same StateGraph
+    canon = np.argsort(a * S + b, kind="stable")
+    a, b = a[canon], b[canon]
+    keys = a * S + b
     adj = sp.csr_matrix((np.ones(len(a), np.float32), (a, b)), shape=(S, S))
     fwd_T = adj.T.tocsr()
     order = np.argsort(b, kind="stable")
@@ -237,13 +287,31 @@ class ATResult:
     channels: Channels
     n_vc: int
     allowed: set                       # ((c_in, v0), (c_out, v1))
-    allowed_by_in: Dict[Tuple[int, int], List[Tuple[int, int]]]
     trees: List[List[int]]             # robust spanning trees (channel lists)
+    stats: Optional[dict] = None       # admission-engine counters
     _sg: Optional[StateGraph] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _edges: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)   # (E, 2) state edges
+    _by_in: Optional[Dict] = dataclasses.field(
         default=None, repr=False, compare=False)
 
     def is_allowed(self, cin, v0, cout, v1) -> bool:
         return ((cin, v0), (cout, v1)) in self.allowed
+
+    @property
+    def allowed_by_in(self) -> Dict[Tuple[int, int], List[Tuple[int, int]]]:
+        """Out-turns per (channel, vc) state, built lazily (the reference
+        enumerator is the only consumer; the hot path uses
+        :meth:`state_graph`). Canonically sorted so both admission engines
+        drive the python oracle identically."""
+        if self._by_in is None:
+            by_in: Dict[Tuple[int, int], List[Tuple[int, int]]] = \
+                defaultdict(list)
+            for (a, b) in sorted(self.allowed):
+                by_in[a].append(b)
+            self._by_in = dict(by_in)
+        return self._by_in
 
     def state_graph(self) -> StateGraph:
         """Packed CSR of ``allowed`` (built once, then cached)."""
@@ -314,72 +382,101 @@ def ocs_disjoint_spanning_trees(topo: Topology, ch: Channels
     return t0, t1
 
 
+def _tree_turns_array(chans, ch: Channels) -> np.ndarray:
+    """All non-reversing turns among a tree's channels, as a ``(K, 2)``
+    ``(cin, cout)`` array (the set is acyclic together).
+
+    Vectorised ragged cross-product, order-identical to the seed's dict
+    loops (mid nodes by first occurrence as a destination in ``chans``,
+    in/out channels in ``chans`` order) -- the emitted order feeds the
+    admission sequence, which must match ``at_engine="reference"``.
+    """
+    A = np.asarray(chans, np.int64)
+    if len(A) == 0:
+        return np.zeros((0, 2), np.int32)
+    dstA = ch.dst[A].astype(np.int64)
+    srcA = ch.src[A].astype(np.int64)
+    # mid nodes ranked by first occurrence as a dst
+    du, di = np.unique(dstA, return_index=True)
+    mids = du[np.argsort(di, kind="stable")]
+    rank = np.full(ch.n_nodes, -1, np.int64)
+    rank[mids] = np.arange(len(mids))
+    ins = A[np.argsort(rank[dstA], kind="stable")]        # grouped by mid
+    icnt = np.bincount(rank[dstA], minlength=len(mids)).astype(np.int64)
+    omask = rank[srcA] >= 0
+    osel = A[omask]
+    og = rank[srcA[omask]]
+    outs = osel[np.argsort(og, kind="stable")]
+    ocnt = np.bincount(og, minlength=len(mids)).astype(np.int64)
+    # per group g: icnt[g] * ocnt[g] (cin-major) pairs
+    cin = np.repeat(ins, np.repeat(ocnt, icnt))
+    tot = icnt * ocnt
+    if int(tot.sum()) == 0:
+        return np.zeros((0, 2), np.int32)
+    ostart = np.cumsum(ocnt) - ocnt
+    gstart = np.cumsum(tot) - tot
+    within = np.arange(int(tot.sum())) - np.repeat(gstart, tot)
+    cout = outs[np.repeat(ostart, tot) + within % np.repeat(ocnt, tot)]
+    keep = ch.dst[cout] != ch.src[cin]                    # no u-turn
+    return np.stack([cin[keep], cout[keep]], axis=1).astype(np.int32)
+
+
 def _tree_turns(chans: List[int], ch: Channels) -> List[Tuple[int, int]]:
-    """All non-reversing turns among a tree's channels (acyclic together)."""
-    by_node = defaultdict(list)
-    for c in chans:
-        by_node[int(ch.dst[c])].append(c)
-    out_by_node = defaultdict(list)
-    for c in chans:
-        out_by_node[int(ch.src[c])].append(c)
-    turns = []
-    for mid, ins in by_node.items():
-        for cin in ins:
-            for cout in out_by_node.get(mid, []):
-                if ch.dst[cout] != ch.src[cin]:      # no u-turn
-                    turns.append((cin, cout))
-    return turns
+    """List-of-tuples view of :func:`_tree_turns_array` (API edge)."""
+    return list(map(tuple, _tree_turns_array(chans, ch).tolist()))
+
+
+def base_turns_array(ch: Channels) -> np.ndarray:
+    """All non-reversing ``(cin, cout)`` turns as a ``(T, 2)`` array.
+
+    One ragged gather over the out-adjacency CSR: for every channel
+    ``cin`` the out-channels of its arrival node, minus u-turns. Order is
+    ``cin``-major with ``cout`` ascending -- identical to the seed's dict
+    loop, so turn-priority permutations line up exactly.
+    """
+    mid = ch.dst.astype(np.int64)                         # (C,)
+    deg = (ch.out_indptr[mid + 1] - ch.out_indptr[mid]).astype(np.int64)
+    total = int(deg.sum())
+    cin = np.repeat(np.arange(ch.n, dtype=np.int64), deg)
+    within = np.arange(total) - np.repeat(np.cumsum(deg) - deg, deg)
+    cout = ch.out_chan[ch.out_indptr[mid[cin]] + within].astype(np.int64)
+    keep = ch.dst[cout] != ch.src[cin]
+    return np.stack([cin[keep], cout[keep]], axis=1).astype(np.int32)
 
 
 def base_turns(ch: Channels) -> List[Tuple[int, int]]:
-    out_by_node = defaultdict(list)
-    for c in range(ch.n):
-        out_by_node[int(ch.src[c])].append(c)
-    turns = []
-    for cin in range(ch.n):
-        mid = int(ch.dst[cin])
-        for cout in out_by_node[mid]:
-            if int(ch.dst[cout]) != int(ch.src[cin]):
-                turns.append((cin, cout))
-    return turns
+    """List-of-tuples view of :func:`base_turns_array` (API edge)."""
+    return list(map(tuple, base_turns_array(ch).tolist()))
 
 
-def prioritize_turns(turns, mode: str, topo: Topology, ch: Channels,
-                     seed: int = 0, sym_perms: Optional[np.ndarray] = None):
-    """APL: by frequency over all-shortest-path sets; CPL needs a chosen
-    routing (caller re-invokes); Random: shuffled.
+def _apl_turn_frequencies(t: np.ndarray, topo: Topology,
+                          ch: Channels) -> np.ndarray:
+    """APL frequency of each turn in ``t`` ((T, 2) int) over the
+    all-shortest-path sets.
 
-    APL counting is batched over the BFS level structure: per-source path
-    multiplicities come from level-masked sparse matrix products, and each
-    turn's frequency is one masked reduction over all sources at once
-    (the seed's per-source parent/grandparent triple loop was O(n deg^2)
+    Batched over the BFS level structure: per-source path multiplicities
+    come from level-masked sparse matrix products, and each turn's
+    frequency is one masked reduction over all sources at once (the
+    seed's per-source parent/grandparent triple loop was O(n deg^2)
     python and dominated ``allowed_turns`` beyond ~200 nodes).
     """
-    rng = np.random.default_rng(seed)
-    if mode == "random":
-        turns = list(turns)
-        rng.shuffle(turns)
-        return turns
     import scipy.sparse as sp
     from repro.core.topology import bfs_all_pairs
-    turns = list(turns)
-    if not turns:
-        return turns
     n = topo.n
     d = bfs_all_pairs(topo)                       # (n, n) float, inf = cut
     finite = np.isfinite(d)
     maxd = int(d[finite].max()) if finite.any() else 0
-    adj_T = sp.csr_matrix((np.ones(ch.n, np.float64),
+    d32 = np.where(finite, d, -2.0).astype(np.float32)
+    adj_T = sp.csr_matrix((np.ones(ch.n, np.float32),
                            (ch.dst.astype(np.int64),
                             ch.src.astype(np.int64))), shape=(n, n))
     # npaths[s, v]: shortest-path multiplicities, filled level by level
-    npaths = np.zeros((n, n))
+    npaths = np.zeros((n, n), np.float32)
     npaths[np.arange(n), np.arange(n)] = 1.0
     for lvl in range(1, maxd + 1):
-        prev = np.where(d == lvl - 1, npaths, 0.0)
+        prev = np.where(d32 == lvl - 1, npaths, np.float32(0.0))
         contrib = adj_T.dot(prev.T).T             # sum over in-neighbors
-        npaths = np.where(d == lvl, contrib, npaths)
-    t = np.asarray(turns, np.int64)               # (T, 2)
+        npaths = np.where(d32 == lvl, contrib, npaths)
     cin, cout = t[:, 0], t[:, 1]
     gp = ch.src[cin].astype(np.int64)
     mid = ch.dst[cin].astype(np.int64)
@@ -387,19 +484,561 @@ def prioritize_turns(turns, mode: str, topo: Topology, ch: Channels,
     freq = np.zeros(len(t))
     chunk = max(1, (1 << 24) // max(len(t), 1))
     for s0 in range(0, n, chunk):
-        D = d[s0:s0 + chunk]
-        on_dag = (D[:, gp] + 1 == D[:, mid]) & (D[:, mid] + 1 == D[:, vv])
-        freq += (on_dag * npaths[s0:s0 + chunk][:, gp]).sum(axis=0)
+        D = d32[s0:s0 + chunk]
+        dm = D[:, mid]
+        on_dag = (D[:, gp] + 1 == dm) & (dm + 1 == D[:, vv])
+        freq += (on_dag * npaths[s0:s0 + chunk][:, gp]).sum(axis=0,
+                                                           dtype=np.float64)
+    return freq
+
+
+def prioritize_turns(turns, mode: str, topo: Topology, ch: Channels,
+                     seed: int = 0, sym_perms: Optional[np.ndarray] = None):
+    """APL: by frequency over all-shortest-path sets; CPL needs a chosen
+    routing (caller re-invokes); Random: shuffled. List API edge over
+    :func:`_priority_permutation` (the engines consume the permutation)."""
+    rng = np.random.default_rng(seed)
+    if mode == "random":
+        turns = list(turns)
+        rng.shuffle(turns)
+        return turns
+    turns = list(turns)
+    if not turns:
+        return turns
+    freq = _apl_turn_frequencies(np.asarray(turns, np.int64), topo, ch)
     order = np.argsort(-freq, kind="stable")
     return [turns[i] for i in order]
 
 
-def allowed_turns(topo: Topology, n_vc: int = 2, priority: str = "apl",
-                  robust: bool = False, seed: int = 0,
-                  chosen_loads: Optional[Dict[Tuple[int, int], float]] = None
-                  ) -> ATResult:
-    """Algorithm 1. ``chosen_loads`` (turn -> frequency in a chosen routing)
-    enables the CPL variant on a second invocation."""
+def _priority_permutation(turns_arr: np.ndarray, priority: str,
+                          topo: Topology, ch: Channels, seed: int,
+                          chosen_loads: Optional[Dict] = None) -> np.ndarray:
+    """Shared turn ordering of both admission engines, as indices into
+    ``turns_arr``. Must replay the seed's list-based ordering exactly:
+    stable descending sorts, and ``random`` via a python-list shuffle
+    (the Fisher-Yates draw sequence depends only on the length)."""
+    T = len(turns_arr)
+    if T == 0:
+        return np.zeros(0, np.int64)
+    if chosen_loads is not None:
+        vals = np.fromiter((chosen_loads.get((int(a), int(b)), 0.0)
+                            for a, b in turns_arr), np.float64, T)
+        return np.argsort(-vals, kind="stable")
+    if priority == "random":
+        idx = list(range(T))
+        np.random.default_rng(seed).shuffle(idx)
+        return np.asarray(idx, np.int64)
+    freq = _apl_turn_frequencies(turns_arr.astype(np.int64), topo, ch)
+    return np.argsort(-freq, kind="stable")
+
+
+def _vc_order_pairs(n_vc: int) -> np.ndarray:
+    """The seed's VC-assignment try order: same-VC diagonals first, then
+    the cross assignments in double-loop order. ``(n_vc^2, 2)`` int."""
+    vo = [(v, v) for v in range(n_vc)] + \
+        [(v0, v1) for v0 in range(n_vc) for v1 in range(n_vc) if v0 != v1]
+    return np.asarray(vo, np.int64)
+
+
+class _BatchedDAG:
+    """Array-native incremental-cycle-detection engine for turn admission.
+
+    Replays the serial greedy (one ``IncrementalDAG.try_add`` per
+    VC-labeled turn) exactly, but in blocks:
+
+    - ``level`` is a topological numbering of the accepted DAG (every
+      edge strictly increases it). Any attempt consistent with it
+      (``level[u] < level[v]``) cannot close a cycle, and a whole batch
+      of such *forward* edges stays acyclic together -- accepted
+      wholesale with no renumbering.
+    - Backward attempts are resolved by one batched BFS over the
+      accepted out-adjacency (:meth:`reach`), pruned to each row's level
+      window: rows whose head already reaches their tail are definite
+      rejections (reachability only grows, so the serial run rejects
+      them too -- and the rejection is sticky across both VC passes);
+      the rest are *contested*.
+    - One SCC pass over accepted + candidates (:meth:`_cycle_edges`)
+      localises conflicts exactly: a candidate can be invalidated only
+      by candidates inside its own non-trivial strongly connected
+      component. If no component exists, every candidate is admissible
+      at its serial position and the block's winners commit in one
+      bulk accept.
+    - Otherwise the *tangled* minority is replayed in serial order over
+      per-component interaction graphs (:meth:`_h_graph`; a CDG cycle
+      alternates candidate edges with pure-G paths, which never leave
+      the component) using an incremental bit-packed transitive closure
+      -- the exact, still array-native, dead-end fallback. Components
+      bigger than ``tangle_cap`` first split the block in half, which
+      shrinks them geometrically.
+    - Levels are repaired by :meth:`_relax`, a gap-spaced frontier
+      relaxation confined to the raised region.
+
+    The out-adjacency is a capacity-preallocated CSR: every candidate
+    edge's slot is known from the turn grid ahead of time, so accepting
+    a batch is O(batch) array writes and the BFS passes never rebuild
+    anything.
+    """
+
+    def __init__(self, n_states: int, cap_out: np.ndarray, stats: dict):
+        S = int(n_states)
+        self.S = S
+        self.level = np.zeros(S, np.int64)
+        self.cap_start = np.zeros(S + 1, np.int64)
+        np.cumsum(cap_out, out=self.cap_start[1:])
+        self.buf = np.zeros(int(self.cap_start[-1]), np.int32)
+        self.fill = np.zeros(S, np.int64)          # == out-degree
+        self.n_edges = 0
+        self._log: List[Tuple[np.ndarray, np.ndarray]] = []
+        self.gap = 8            # level-raise headroom (see _relax)
+        self.tangle_cap = 1024  # biggest tangle resolved without a split
+        self.stats = stats
+
+    # -- accepted-graph storage --------------------------------------------
+
+    def accept(self, u: np.ndarray, v: np.ndarray) -> None:
+        """Append accepted edges (caller guarantees acyclicity)."""
+        if not len(u):
+            return
+        order = np.argsort(u, kind="stable")
+        us, vs = u[order], v[order]
+        ku, ui, cnt = np.unique(us, return_index=True, return_counts=True)
+        rank = np.arange(len(us)) - np.repeat(ui, cnt)
+        self.buf[self.cap_start[us] + self.fill[us] + rank] = vs
+        self.fill[ku] += cnt
+        self._log.append((us, vs))
+        self.n_edges += len(us)
+
+    def _edge_arrays(self):
+        """All accepted edges as two flat arrays (log consolidation)."""
+        if len(self._log) > 1:
+            self._log = [(np.concatenate([e[0] for e in self._log]),
+                          np.concatenate([e[1] for e in self._log]))]
+        if not self._log:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        return self._log[0]
+
+    def _expand(self, states: np.ndarray):
+        """Out-neighbors of ``states``: (index-into-states, neighbor)."""
+        cnt = self.fill[states]
+        total = int(cnt.sum())
+        if total == 0:
+            return (np.zeros(0, np.int64), np.zeros(0, np.int64))
+        rep = np.repeat(np.arange(len(states)), cnt)
+        inner = np.arange(total) - np.repeat(np.cumsum(cnt) - cnt, cnt)
+        nbr = self.buf[self.cap_start[states[rep]] + inner].astype(np.int64)
+        return rep, nbr
+
+    # -- batched reachability ----------------------------------------------
+
+    def reach(self, src: np.ndarray, tgt: np.ndarray) -> np.ndarray:
+        """``out[i]`` = can ``src[i]`` reach ``tgt[i]`` in the accepted
+        DAG. Frontier BFS batched over rows, each pruned to its own
+        level window: any path into ``tgt`` stays strictly below the
+        target's level, so most windows are a handful of states."""
+        B = len(src)
+        reached = np.zeros(B, bool)
+        if B == 0 or self.n_edges == 0:
+            return reached
+        self.stats["bfs_rows"] += B
+        S = self.S
+        CH = 1024
+        for i in range(0, B, CH):
+            s, t = src[i:i + CH], tgt[i:i + CH]
+            b = len(s)
+            cap = self.level[t]
+            visited = np.zeros((b, S), bool)
+            rows = np.arange(b)
+            cur = s.astype(np.int64)
+            visited[rows, cur] = True
+            got = np.zeros(b, bool)
+            while len(rows):
+                rep, nbr = self._expand(cur)
+                r2 = rows[rep]
+                hit = nbr == t[r2]
+                if hit.any():
+                    got[r2[hit]] = True
+                keep = ~hit & ~got[r2] & (self.level[nbr] < cap[r2]) & \
+                    ~visited[r2, nbr]
+                r2, nbr = r2[keep], nbr[keep]
+                if len(r2):
+                    _, first = np.unique(r2 * S + nbr, return_index=True)
+                    r2, nbr = r2[first], nbr[first]
+                    visited[r2, nbr] = True
+                rows, cur = r2, nbr
+            reached[i:i + b] = got
+        return reached
+
+    def commit(self, eu: np.ndarray, ev: np.ndarray,
+               n_backward: int) -> None:
+        """Accept a verified-acyclic batch, relaxing levels first when
+        it contains backward edges (forward-only batches keep the
+        current numbering valid as-is)."""
+        if n_backward:
+            lv = self._relax(eu, ev)
+            assert lv is not None, "committed batches are acyclic"
+            self.level = lv
+        self.accept(eu, ev)
+
+    # -- bulk commit (local level relaxation) ------------------------------
+
+    def _relax(self, bu: np.ndarray, bv: np.ndarray
+               ) -> Optional[np.ndarray]:
+        """Raise a copy of ``level`` until every accepted + batch edge
+        strictly increases it, touching only the affected region (the
+        descendants of raised batch heads). The ``gap`` headroom above
+        the strict minimum means most future raises land below their
+        descendants and stop immediately. Returns the new levels, or
+        ``None`` when a level exceeds the acyclic bound (certain
+        cycle -- callers only pass verified-acyclic batches, so this
+        is an internal invariant check)."""
+        GAP = np.int64(self.gap)              # headroom absorbs future
+        lv = self.level.copy()                # raises, cutting cascades
+        if not len(bu):
+            return lv
+        bound = int(lv.max()) + (self.S + 1) * int(GAP)
+        order = np.argsort(bu, kind="stable")
+        sbu, sbv = bu[order], bv[order]
+        cur, val = sbv, lv[sbu] + GAP
+        keep = val > lv[cur]
+        cur, val = cur[keep], val[keep]
+        while len(cur):
+            if len(cur) > 1:                  # per-node max proposal
+                o = np.lexsort((-val, cur))
+                cur, val = cur[o], val[o]
+                first = np.ones(len(cur), bool)
+                first[1:] = cur[1:] != cur[:-1]
+                cur, val = cur[first], val[first]
+            lv[cur] = val
+            if int(val.max()) > bound:
+                return None
+            rep, nbr = self._expand(cur)
+            nv = lv[cur[rep]] + GAP
+            lo = np.searchsorted(sbu, cur)    # batch out-edges of cur
+            cnt2 = np.searchsorted(sbu, cur, side="right") - lo
+            if cnt2.any():
+                rep2 = np.repeat(np.arange(len(cur)), cnt2)
+                inner = np.arange(int(cnt2.sum())) - \
+                    np.repeat(np.cumsum(cnt2) - cnt2, cnt2)
+                nbr = np.concatenate([nbr, sbv[lo[rep2] + inner]])
+                nv = np.concatenate([nv, lv[cur[rep2]] + GAP])
+            keep = nv > lv[nbr]
+            cur, val = nbr[keep], nv[keep]
+        return lv
+
+    def _cycle_edges(self, bu: np.ndarray, bv: np.ndarray):
+        """``out[k]`` = batch edge k lies on some cycle of accepted +
+        batch; also returns the per-node SCC labels. Exact: an edge is
+        on a cycle iff its endpoints share a non-trivial strongly
+        connected component of the union."""
+        import scipy.sparse as sp
+        from scipy.sparse.csgraph import connected_components
+        gu, gv = self._edge_arrays()
+        rows = np.concatenate([gu, bu])
+        cols = np.concatenate([gv, bv])
+        m = sp.csr_matrix((np.ones(len(rows), np.int8), (rows, cols)),
+                          shape=(self.S, self.S))
+        ncomp, labels = connected_components(m, directed=True,
+                                             connection="strong")
+        sizes = np.bincount(labels, minlength=ncomp)
+        return (labels[bu] == labels[bv]) & (sizes[labels[bu]] > 1), labels
+
+
+    # -- tangle interaction graphs -----------------------------------------
+
+    def _h_graph(self, members: np.ndarray, srcs: np.ndarray,
+                 tails: np.ndarray):
+        """Interaction bitsets of one conflict component: bit ``j`` of
+        ``hout[i]`` iff ``srcs[i]`` reaches ``tails[j]`` through the
+        accepted DAG (the empty path counts: ``srcs[i] == tails[j]``).
+        A union-cycle's pure-G segments never leave its strongly
+        connected component, so reachability is computed inside the
+        member subgraph only -- and since the accepted graph is a DAG,
+        one scatter-OR sweep over its level bands (reverse topological
+        order) closes all tail bitsets at once, with no per-source
+        BFS."""
+        m, c = len(members), len(srcs)
+        W = (c + 63) // 64
+        comp = np.full(self.S, -1, np.int64)
+        comp[members] = np.arange(m)
+        word = (np.arange(c) >> 6).astype(np.int64)
+        bit = np.uint64(1) << (np.arange(c) & 63).astype(np.uint64)
+        R = np.zeros((m, W), np.uint64)       # tails reachable from node
+        ct = comp[tails]
+        np.bitwise_or.at(R, (ct, word), bit)  # a tail reaches itself
+        gu, gv = self._edge_arrays()
+        eu, ev = comp[gu], comp[gv]
+        keep = (eu >= 0) & (ev >= 0)
+        eu, ev = eu[keep], ev[keep]
+        if len(eu):
+            lv = self.level[members[ev]]
+            order = np.argsort(-lv, kind="stable")
+            eu, ev, lv = eu[order], ev[order], lv[order]
+            bands = np.nonzero(np.diff(lv))[0] + 1
+            for lo, hi in zip(np.r_[0, bands], np.r_[bands, len(eu)]):
+                np.bitwise_or.at(R, eu[lo:hi], R[ev[lo:hi]])
+        hout = R[comp[srcs]]
+        # no self interactions (reachability back to the own tail was
+        # ruled out by the classification BFS)
+        hout[np.arange(c), word] &= ~bit
+        bools = np.unpackbits(hout.view(np.uint8), axis=1,
+                              bitorder="little")[:, :c].astype(bool)
+        packed = np.packbits(bools.T, axis=1, bitorder="little")
+        hin = np.zeros((c, W * 8), np.uint8)
+        hin[:, :packed.shape[1]] = packed
+        return hout, hin.view(np.uint64)
+
+    # -- exact grid admission ----------------------------------------------
+
+    def admit_grid(self, u: np.ndarray, v: np.ndarray, skip: np.ndarray,
+                   rej: np.ndarray, first_only: bool):
+        """Admit a ``(B, n_vo)`` grid of VC-labeled attempts in serial
+        (row-major) order; ``skip`` marks already-allowed edges (trivial
+        successes), ``rej`` previously confirmed rejections (sticky --
+        reachability only grows). Returns the newly accepted and newly
+        rejected grid masks; the result is identical to per-attempt
+        serial admission. ``first_only`` replays pass 1 of Algorithm 1,
+        where each row stops at its first success.
+
+        One pass per block: the forward test plus one batched BFS
+        classifies every attempt into forward / rejected / contested;
+        one SCC pass over accepted + candidates localises the conflict
+        tangles exactly (an edge is on a union cycle iff its endpoints
+        share a non-trivial component). Untangled candidates commit
+        wholesale -- nothing can invalidate them. For each tangle the
+        interaction graph H (head-reaches-tail through the accepted
+        DAG, confined to the component -- a CDG cycle alternates
+        candidate edges with pure-G paths, which is exactly an
+        H-cycle) comes from :meth:`_h_graph`, and the serial greedy is
+        replayed over it with an incremental bit-packed transitive
+        closure: rejects are one bitset AND, accepts one vectorized
+        ancestor scan. All accepted edges then land in one bulk accept
+        + level repair. Components larger than ``tangle_cap`` halve
+        the block instead (sequential halves stay exact and tangles
+        shrink geometrically with block size)."""
+        B, n_vo = u.shape
+        acc = np.zeros((B, n_vo), bool)
+        new_rej = np.zeros((B, n_vo), bool)
+        undecided = ~skip & ~rej
+        fwd = np.zeros_like(undecided)
+        ur, uc = np.nonzero(undecided)
+        fwd[ur, uc] = self.level[u[ur, uc]] < self.level[v[ur, uc]]
+        need = undecided & ~fwd
+        contested = np.zeros_like(need)
+        nr, nc = np.nonzero(need)
+        if len(nr):
+            reached = self.reach(v[nr, nc], u[nr, nc])
+            contested[nr, nc] = ~reached
+            new_rej[nr, nc] = reached
+        cand = fwd | contested
+        if not cand.any():
+            return acc, new_rej
+        cr, cc = np.nonzero(cand)             # row-major == serial order
+        cu, cv = u[cr, cc], v[cr, cc]
+        dirty = np.zeros(len(cr), bool)
+        if contested[cr, cc].any():
+            self.stats["scc_checks"] += 1
+            dirty, labels = self._cycle_edges(cu, cv)
+        if not dirty.any():
+            if first_only:                    # winner = first success col
+                okg = skip | cand
+                rows = np.nonzero(okg.any(axis=1))[0]
+                wcol = okg.argmax(axis=1)[rows]
+                keep = ~skip[rows, wcol]
+                erow, ecol = rows[keep], wcol[keep]
+            else:
+                erow, ecol = cr, cc
+            eu, ev = u[erow, ecol], v[erow, ecol]
+            n_cont = int(contested[erow, ecol].sum())
+            self.commit(eu, ev, n_cont)
+            acc[erow, ecol] = True
+            self.stats["contested_bulk"] += n_cont
+            self.stats["fwd_bulk"] += len(eu) - n_cont
+            return acc, new_rej
+        # tangled block: build the interaction bitsets per conflict
+        # component, then replay the serial decisions over a transitively
+        # closed "reaches-which-accepted" bitset per attempt
+        self.stats["conflict_rounds"] += 1
+        c = len(cr)
+        dk = np.nonzero(dirty)[0]
+        glab = labels[cu[dk]]
+        _, gcounts = np.unique(glab, return_counts=True)
+        if B > 1 and int(gcounts.max()) > self.tangle_cap:
+            # a tangle this big makes the closure quadratic: halve the
+            # block (sequential halves stay exact; the sticky rejections
+            # discovered above carry over, so no reachability is redone)
+            mid = B // 2
+            half_rej = rej | new_rej
+            a1, r1 = self.admit_grid(u[:mid], v[:mid], skip[:mid],
+                                     half_rej[:mid], first_only)
+            acc[:mid] |= a1
+            new_rej[:mid] |= r1
+            a2, r2 = self.admit_grid(u[mid:], v[mid:], skip[mid:],
+                                     half_rej[mid:], first_only)
+            acc[mid:] |= a2
+            new_rej[mid:] |= r2
+            return acc, new_rej
+        grp_of = np.full(c, -1, np.int64)     # cand idx -> group id
+        loc_of = np.full(c, -1, np.int64)     # cand idx -> group-local idx
+        groups = []
+        for g, lab in enumerate(np.unique(glab)):
+            idx = dk[glab == lab]
+            grp_of[idx] = g
+            loc_of[idx] = np.arange(len(idx))
+            members = np.nonzero(labels == lab)[0]
+            hout, hin = self._h_graph(members, cv[idx], cu[idx])
+            ct = len(idx)
+            Wt = hout.shape[1]
+            groups.append({
+                "hout": hout, "hin": hin,
+                "word": (np.arange(ct) >> 6).astype(np.int64),
+                "bit": np.uint64(1) << (np.arange(ct) & 63).astype(
+                    np.uint64),
+                "D": np.zeros((ct, Wt), np.uint64),  # reachable accepted
+                "flag_w": np.zeros(Wt, np.uint64),
+            })
+        commit = np.zeros(c, bool)
+
+        def try_insert(k: int) -> bool:
+            """Insert attempt k into its component's accepted subgraph
+            unless that closes an H-cycle (== a CDG cycle through k): the
+            accepted attempts reachable from k must avoid its accepted
+            in-neighbors. ``D`` rows are transitively closed, so the
+            test is one bitset AND; an accept updates the closure with
+            one vectorized ancestor scan."""
+            G = groups[grp_of[k]]
+            p = int(loc_of[k])
+            inw = G["hin"][p] & G["flag_w"]
+            D = G["D"]
+            if (D[p] & inw).any():
+                return False
+            pw, pb = G["word"][p], G["bit"][p]
+            anc = ((G["hout"][:, pw] & pb) != 0) | \
+                (D & inw[None, :]).any(axis=1)
+            newbits = D[p].copy()
+            newbits[pw] |= pb
+            ai = np.nonzero(anc)[0]
+            if len(ai):                       # everything reaching p
+                D[ai] |= newbits              # inherits its closure
+            G["flag_w"][pw] |= pb
+            return True
+
+        kgrid = np.full((B, n_vo), -1, np.int64)
+        kgrid[cr, cc] = np.arange(len(cr))
+        if first_only:
+            rlist = np.nonzero(cand.any(axis=1) | skip.any(axis=1))[0]
+        else:
+            rlist = np.nonzero(cand.any(axis=1))[0]
+        for r in rlist.tolist():
+            for j in range(n_vo):
+                if skip[r, j]:
+                    if first_only:
+                        break
+                    continue
+                k = kgrid[r, j]
+                if k < 0:
+                    continue                  # rejected or not undecided
+                k = int(k)
+                if not dirty[k] or try_insert(k):
+                    commit[k] = True
+                else:
+                    new_rej[r, j] = True
+                    continue
+                if first_only:
+                    break
+        eu, ev = cu[commit], cv[commit]
+        n_cont = int(contested[cr[commit], cc[commit]].sum())
+        self.commit(eu, ev, n_cont)
+        acc[cr[commit], cc[commit]] = True
+        nd = commit & ~dirty
+        nd_cont = int(contested[cr[nd], cc[nd]].sum())
+        self.stats["tangle_commits"] += int((commit & dirty).sum())
+        self.stats["contested_bulk"] += nd_cont
+        self.stats["fwd_bulk"] += int(nd.sum()) - nd_cont
+        return acc, new_rej
+
+
+def _allowed_turns_batched(topo: Topology, n_vc: int, priority: str,
+                           robust: bool, seed: int,
+                           chosen_loads: Optional[Dict],
+                           block: int = 1024) -> ATResult:
+    """Algorithm 1 via the batched admission engine (see
+    :class:`_BatchedDAG`); produces the exact allowed set of
+    ``at_engine="reference"``."""
+    ch = Channels.from_topology(topo)
+    S = ch.n * n_vc
+    turns = base_turns_array(ch)                      # (T, 2)
+    T = len(turns)
+    vo = _vc_order_pairs(n_vc)                        # (n_vo, 2)
+    n_vo = len(vo)
+    cin = turns[:, 0].astype(np.int64)
+    cout = turns[:, 1].astype(np.int64)
+    U = cin[:, None] * n_vc + vo[None, :, 0]          # (T, n_vo) tails
+    V = cout[:, None] * n_vc + vo[None, :, 1]         # (T, n_vo) heads
+    # per-state slot capacity = candidate attempts with that tail state:
+    # every possible edge has a reserved CSR slot
+    cap_out = np.repeat(np.bincount(cin, minlength=ch.n), n_vc) * n_vc
+    stats = {"blocks": 0, "fwd_bulk": 0, "contested_bulk": 0,
+             "bfs_rows": 0, "scc_checks": 0, "conflict_rounds": 0,
+             "tangle_commits": 0, "admitted_per_block": []}
+    eng = _BatchedDAG(S, cap_out, stats)
+    acc = np.zeros((T, n_vo), bool)                   # == the allowed set
+    rej = np.zeros((T, n_vo), bool)                   # sticky rejections
+    keys = cin * ch.n + cout                          # ascending by build
+    trees: List[List[int]] = []
+
+    def admit_block(b: np.ndarray, j: slice, first_only: bool) -> None:
+        res, res_rej = eng.admit_grid(U[b, j], V[b, j], acc[b, j],
+                                      rej[b, j], first_only)
+        acc[b, j] |= res
+        rej[b, j] |= res_rej
+        stats["blocks"] += 1
+        stats["admitted_per_block"].append(int(res.sum()))
+
+    def admit_stream(tt: np.ndarray, vc: int) -> None:
+        """Seeding stream: same-VC turns admitted in sequence (each its
+        own group, like the serial add_turn loop)."""
+        if not len(tt):
+            return
+        ti = np.searchsorted(keys, tt[:, 0].astype(np.int64) * ch.n
+                             + tt[:, 1])
+        j = slice(int(vc), int(vc) + 1)               # diagonal (vc, vc)
+        for i in range(0, len(ti), block):
+            admit_block(ti[i:i + block], j, first_only=False)
+
+    if robust:
+        pair = ocs_disjoint_spanning_trees(topo, ch)
+        if pair is not None:
+            for vc, tree in zip((0, min(1, n_vc - 1)), pair):
+                trees.append(tree)
+                admit_stream(_tree_turns_array(tree, ch), vc)
+
+    # routability seed: spanning tree on VC0 (Alg. 1 lines 9-10)
+    t0, _ = spanning_tree_channels(topo, ch, 0)
+    admit_stream(_tree_turns_array(t0, ch), 0)
+
+    perm = _priority_permutation(turns, priority, topo, ch, seed,
+                                 chosen_loads)
+    # pass 1 (first success per turn), then pass 2 (every admissible VC
+    # assignment), in per-VC-layer block admissions
+    for first_only in (True, False):
+        for i in range(0, T, block):
+            admit_block(perm[i:i + block], slice(None), first_only)
+
+    tr, tv = np.nonzero(acc)
+    edges = np.stack([U[tr, tv], V[tr, tv]], axis=1)
+    allowed = set(zip(zip(cin[tr].tolist(), vo[tv, 0].tolist()),
+                      zip(cout[tr].tolist(), vo[tv, 1].tolist())))
+    stats["allowed"] = len(allowed)
+    stats["engine"] = "batched"
+    return ATResult(ch, n_vc, allowed, trees, stats=stats, _edges=edges)
+
+
+def _allowed_turns_reference(topo: Topology, n_vc: int, priority: str,
+                             robust: bool, seed: int,
+                             chosen_loads: Optional[Dict]) -> ATResult:
+    """The seed implementation: one python Pearce-Kelly insertion per
+    VC-labeled turn. Kept as the equivalence oracle of the batched
+    engine (identical allowed set, bit for bit)."""
     ch = Channels.from_topology(topo)
     n_states = ch.n * n_vc
     dag = IncrementalDAG(n_states)
@@ -428,14 +1067,12 @@ def allowed_turns(topo: Topology, n_vc: int = 2, priority: str = "apl",
     for (cin, cout) in _tree_turns(t0, ch):
         add_turn(cin, 0, cout, 0)
 
-    turns = base_turns(ch)
-    if chosen_loads is not None:
-        turns = sorted(turns, key=lambda t: -chosen_loads.get(t, 0.0))
-    else:
-        turns = prioritize_turns(turns, priority, topo, ch, seed=seed)
+    turns_arr = base_turns_array(ch)
+    perm = _priority_permutation(turns_arr, priority, topo, ch, seed,
+                                 chosen_loads)
+    turns = [(int(a), int(b)) for a, b in turns_arr[perm]]
 
-    vc_orders = [(v, v) for v in range(n_vc)] + \
-        [(v0, v1) for v0 in range(n_vc) for v1 in range(n_vc) if v0 != v1]
+    vc_orders = [tuple(p) for p in _vc_order_pairs(n_vc).tolist()]
     # first pass: at most one VC-labeled instance per base turn
     for (cin, cout) in turns:
         for (v0, v1) in vc_orders:
@@ -446,10 +1083,31 @@ def allowed_turns(topo: Topology, n_vc: int = 2, priority: str = "apl",
         for (v0, v1) in vc_orders:
             add_turn(cin, v0, cout, v1)
 
-    by_in: Dict[Tuple[int, int], List[Tuple[int, int]]] = defaultdict(list)
-    for (a, b) in allowed:
-        by_in[a].append(b)
-    return ATResult(ch, n_vc, allowed, dict(by_in), trees)
+    return ATResult(ch, n_vc, allowed, trees,
+                    stats={"engine": "reference"})
+
+
+def allowed_turns(topo: Topology, n_vc: int = 2, priority: str = "apl",
+                  robust: bool = False, seed: int = 0,
+                  chosen_loads: Optional[Dict[Tuple[int, int], float]] = None,
+                  at_engine: str = "batched") -> ATResult:
+    """Algorithm 1. ``chosen_loads`` (turn -> frequency in a chosen routing)
+    enables the CPL variant on a second invocation.
+
+    ``at_engine="batched"`` (default) runs the array-native admission
+    engine -- forward-edge blocks accepted wholesale against the current
+    topological order, batched BFS over the accepted CSR for the
+    contested backward minority, Kahn bulk commits with bisection
+    fallback. ``at_engine="reference"`` is the seed's serial
+    Pearce-Kelly loop; both produce the identical allowed set.
+    """
+    if at_engine == "reference":
+        return _allowed_turns_reference(topo, n_vc, priority, robust, seed,
+                                        chosen_loads)
+    if at_engine != "batched":
+        raise ValueError(f"unknown at_engine {at_engine!r}")
+    return _allowed_turns_batched(topo, n_vc, priority, robust, seed,
+                                  chosen_loads)
 
 
 # ---------------------------------------------------------------------------

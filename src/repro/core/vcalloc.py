@@ -13,6 +13,11 @@ dead-ends falls back to the per-flow DFS. Assignments are written directly
 into the packed ``PathTable.vcs`` array (the structure the simulator
 consumes); per-VC hop counts come back as a vector. Dict-based inputs are
 not accepted -- convert at the edge with :meth:`PathTable.from_dicts`.
+
+The :class:`~repro.core.routing.ATResult` consumed here is engine-
+agnostic: the batched admission engine and the serial reference produce
+the identical allowed set, and the ``StateGraph`` they compile to is
+canonical, so allocations are bit-identical either way.
 """
 from __future__ import annotations
 
@@ -79,12 +84,13 @@ def allocate_vcs(at: ATResult, table: PathTable, balance: bool = True,
             if not live.any():
                 break
             prev_state = P[:, h - 1] * n_vc + V[:, h - 1]
+            hop_base = P[:, h] * n_vc
             assigned = np.zeros(B, bool)
             for v in vorder:
                 need = live & ~assigned
                 if not need.any():
                     break
-                ok = need & sg.has_edges(prev_state, P[:, h] * n_vc + v)
+                ok = need & sg.has_edges(prev_state, hop_base + v)
                 V[ok, h] = v
                 assigned |= ok
             okflow &= assigned | ~live
