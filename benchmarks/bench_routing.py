@@ -1,28 +1,33 @@
-"""Routing-engine perf tracking: array state-CSR pipeline + batched
-allowed-turns admission vs the seed's per-source python BFS / serial
-Pearce-Kelly (kept as ``engine="reference"`` / ``at_engine="reference"``).
+"""Routing-engine perf tracking: array state-CSR pipeline, streaming
+sharded engine + batched allowed-turns admission vs the seed's per-source
+python BFS / serial Pearce-Kelly (kept as ``engine="reference"`` /
+``at_engine="reference"``).
 
-Measures, on PT pods of 64 / 256 / 512 chips (4^3 / 4x8x8 / 8^3), plus an
-opt-in 1728-chip 12^3 pod under ``--full``:
+Measures, on PT pods of 64 / 256 / 512 chips (4^3 / 4x8x8 / 8^3), plus
+opt-in 1728-chip 12^3 and 4096-chip 16^3 pods under ``--full``:
 
 - wall-clock of the allowed-turns construction for both AT engines (the
   serial reference is skipped above ``REF_CAP`` nodes in quick mode;
   ``--full`` extends the comparison and the exact-set equivalence assert
-  up to the 512-chip pod -- at 12^3 the serial reference takes many
-  minutes, so only the batched engine runs there),
-  with the batched engine's admission breakdown (admitted per block,
-  forward/bulk vs tangle-replayed commits, BFS rows, conflict blocks);
-- wall-clock of candidate enumeration + min-max path selection for both
-  selection engines, and the achieved L_max of both;
-- the full 8^3 (and, with ``--full``, 12^3) end-to-end chain: allowed
-  turns -> candidate enumeration -> path selection -> VC allocation ->
-  simulator tables.
+  up to the 512-chip pod), with the batched engine's admission breakdown
+  (admitted per block, forward/bulk vs tangle-replayed commits, BFS rows,
+  conflict blocks);
+- wall-clock and per-stage split (enumerate vs greedy vs local search vs
+  hot peel/walk) of the array selection engine, and of the streaming
+  sharded engine (BFS vs walk vs greedy vs refinement, with the hot-pool
+  and moved-flow counters), plus both engines' achieved L_max;
+- VC allocation with the exact-lookahead assignment, surfacing the
+  ``greedy_dead_ends`` counter -- flows the old first-fit would have sent
+  to the per-flow DFS fallback (~45% at 8^3; previously invisible);
+- the full 8^3 end-to-end chain, and with ``--full`` the 12^3 / 16^3
+  chains routed by the sharded engine into a packed CSR PathTable
+  (allowed turns -> sharded select -> VC alloc -> simulator tables).
 
 ``--json`` (or ``main(json_path=...)``) writes BENCH_routing.json so the
 perf trajectory is tracked from PR to PR; prior results, if any, are
-loaded tolerantly and printed for comparison, and a regression guard
-warns when the 8^3 ``allowed_turns_s`` regresses more than 1.5x against
-the stored baseline.
+loaded tolerantly and printed for comparison, and regression guards warn
+when the 8^3 ``allowed_turns_s`` or ``array_select_s`` regress more than
+1.5x against the stored baseline.
 """
 from __future__ import annotations
 
@@ -37,9 +42,11 @@ sys.path.insert(0, str(Path(__file__).parent.parent))
 from benchmarks.common import emit, load_bench_json
 
 SPECS = [("n64", (4, 4, 4)), ("n256", (4, 8, 8)), ("n512", (8, 8, 8))]
-FULL_SPECS = [("n1728", (12, 12, 12))]
+FULL_SPECS = [("n1728", (12, 12, 12)), ("n4096", (16, 16, 16))]
 REF_CAP = 256          # largest pod the reference engines run in quick mode
+SHARDED_ONLY = 1000    # above this, only the sharded engine routes
 AT_REGRESSION = 1.5    # warn when 8^3 allowed_turns_s regresses past this
+SELECT_REGRESSION = 1.5  # same guard for the 8^3 array_select_s
 
 
 def _at_breakdown(at) -> dict:
@@ -58,8 +65,26 @@ def _at_breakdown(at) -> dict:
     }
 
 
+def _sharded_breakdown(routed) -> dict:
+    """Condensed stage split + refinement counters of the sharded engine."""
+    s = routed.stats or {}
+    return {k: s.get(k, 0) for k in
+            ("bfs_s", "walk_s", "greedy_s", "refine_s", "greedy_l_max",
+             "refine_pool", "refine_moved", "refine_iters", "k_full_flows",
+             "rounds", "k_min")}
+
+
+def _select_stages(routed) -> dict:
+    """Per-stage wall-clock of the array selection engine."""
+    s = routed.stats or {}
+    return {k: s.get(k, 0.0) for k in
+            ("enumerate_s", "greedy_s", "local_search_s", "hot_peel_s",
+             "hot_walk_s")}
+
+
 def main(full: bool = False, json_path=None) -> dict:
-    from repro.core import netsim as NS, routing as R, topology as T
+    from repro.core import netsim as NS, routing as R, topology as T, \
+        vcalloc as V
 
     prior = load_bench_json(json_path) if json_path else {}
     result: dict = {"K": 4, "local_search_rounds": 2, "sizes": {}}
@@ -87,20 +112,6 @@ def main(full: bool = False, json_path=None) -> dict:
             row["allowed_turns_ref_s"] = round(t_at_ref, 3)
             row["at_speedup"] = round(t_at_ref / max(t_at, 1e-9), 2)
             assert at.allowed == at_ref.allowed, "AT engines diverged"
-        # sub-second timings at 64 chips are noisy: take best-of-3
-        reps = 3 if topo.n <= 64 else 1
-        t_arr = float("inf")
-        for _ in range(reps):
-            t0 = time.time()
-            arr = R.select_paths(at, K=4, local_search_rounds=2,
-                                 engine="array")
-            t_arr = min(t_arr, time.time() - t0)
-        row.update({
-            "array_select_s": round(t_arr, 3),
-            "array_l_max": arr.l_max,
-            "avg_hops": round(arr.avg_hops, 4),
-            "unreachable": arr.unreachable,
-        })
         bd = row["allowed_turns"]
         print(f"  {name}: allowed_turns={t_at:.2f}s "
               f"(blocks={bd['blocks']} "
@@ -111,6 +122,55 @@ def main(full: bool = False, json_path=None) -> dict:
               + (f" vs reference={row['allowed_turns_ref_s']:.2f}s "
                  f"-> {row['at_speedup']:.1f}x"
                  if "at_speedup" in row else ""))
+        # sub-second timings at 64 chips are noisy: take best-of-3
+        reps = 3 if topo.n <= 64 else 1
+        if topo.n <= SHARDED_ONLY:
+            t_arr = float("inf")
+            for _ in range(reps):
+                t0 = time.time()
+                res = R.select_paths(at, K=4, local_search_rounds=2,
+                                     engine="array")
+                if time.time() - t0 < t_arr:
+                    t_arr, arr = time.time() - t0, res
+            st = _select_stages(arr)
+            row.update({
+                "array_select_s": round(t_arr, 3),
+                "array_select_stages": st,
+                "array_l_max": arr.l_max,
+                "avg_hops": round(arr.avg_hops, 4),
+                "unreachable": arr.unreachable,
+            })
+            print(f"  {name}: array={t_arr:.2f}s lmax={arr.l_max:.0f} "
+                  f"(enum={st['enumerate_s']:.2f} "
+                  f"greedy={st['greedy_s']:.2f} "
+                  f"ls={st['local_search_s']:.2f} "
+                  f"peel={st['hot_peel_s']:.2f} "
+                  f"walk={st['hot_walk_s']:.2f})")
+        # streaming sharded engine (the only engine above SHARDED_ONLY)
+        t_sh = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            res = R.select_paths(at, K=4, local_search_rounds=2,
+                                engine="sharded")
+            if time.time() - t0 < t_sh:
+                t_sh, sh = time.time() - t0, res
+        sbd = _sharded_breakdown(sh)
+        row.update({
+            "sharded_select_s": round(t_sh, 3),
+            "sharded_select_stages": sbd,
+            "sharded_l_max": sh.l_max,
+        })
+        if "array_l_max" not in row:
+            row["avg_hops"] = round(sh.avg_hops, 4)
+            row["unreachable"] = sh.unreachable
+        ref_lmax = row.get("array_l_max") or \
+            prior.get("sizes", {}).get(name, {}).get("array_l_max")
+        ratio = f" ({sh.l_max / ref_lmax:.3f}x of array)" if ref_lmax else ""
+        print(f"  {name}: sharded={t_sh:.2f}s lmax={sh.l_max:.0f}{ratio} "
+              f"(bfs={sbd['bfs_s']:.2f} walk={sbd['walk_s']:.2f} "
+              f"greedy={sbd['greedy_s']:.2f} refine={sbd['refine_s']:.2f} "
+              f"pool={sbd['refine_pool']} moved={sbd['refine_moved']} "
+              f"k_full={sbd['k_full_flows']})")
         if topo.n <= REF_CAP or (full and topo.n <= 512):
             t_ref = float("inf")
             for _ in range(reps):
@@ -120,22 +180,29 @@ def main(full: bool = False, json_path=None) -> dict:
                 t_ref = min(t_ref, time.time() - t0)
             row["reference_select_s"] = round(t_ref, 3)
             row["reference_l_max"] = ref.l_max
-            row["speedup"] = round(t_ref / max(t_arr, 1e-9), 2)
-            print(f"  {name}: reference={t_ref:.2f}s array={t_arr:.2f}s "
+            row["speedup"] = round(t_ref / max(row["array_select_s"],
+                                               1e-9), 2)
+            print(f"  {name}: reference={t_ref:.2f}s "
+                  f"array={row['array_select_s']:.2f}s "
                   f"-> {row['speedup']:.1f}x  "
-                  f"lmax {arr.l_max:.0f}/{ref.l_max:.0f}")
-        else:
-            print(f"  {name}: array={t_arr:.2f}s lmax={arr.l_max:.0f} "
-                  f"(reference select skipped)")
+                  f"lmax {row['array_l_max']:.0f}/{ref.l_max:.0f}")
         if topo.n >= 512:
+            routed = sh if topo.n > SHARDED_ONLY else arr
+            vstats: dict = {}
             t0 = time.time()
-            tab = NS.at_tables(topo, at, arr)
+            tab = NS.at_tables(topo, at, routed, stats=vstats)
             t_tab = time.time() - t0
+            sel_s = row.get("array_select_s", row["sharded_select_s"])
             row["vcalloc_tables_s"] = round(t_tab, 3)
-            row["end_to_end_s"] = round(t_at + t_arr + t_tab, 3)
+            row["vcalloc_greedy_dead_ends"] = \
+                vstats.get("greedy_dead_ends", 0)
+            row["end_to_end_s"] = round(t_at + sel_s + t_tab, 3)
+            assert V.verify_deadlock_free(at, tab.table)
             print(f"  {name}: end-to-end (AT -> paths -> VC alloc -> "
                   f"tables) = {row['end_to_end_s']:.1f}s "
-                  f"unreachable={arr.unreachable}")
+                  f"unreachable={row['unreachable']} "
+                  f"vc_dead_ends={row['vcalloc_greedy_dead_ends']} "
+                  f"(resolved by lookahead, no DFS)")
         result["sizes"][name] = row
     sp = result["sizes"]["n64"].get("speedup", 0.0)
     emit("bench_routing_speedup_n64",
@@ -146,21 +213,25 @@ def main(full: bool = False, json_path=None) -> dict:
     emit("bench_routing_at_n512",
          result["sizes"]["n512"]["allowed_turns_s"] * 1e6,
          f"blocks={result['sizes']['n512']['allowed_turns']['blocks']}")
-    # perf-regression guard against the stored baseline
-    prior_at = prior.get("sizes", {}).get("n512", {}).get("allowed_turns_s")
-    now_at = result["sizes"]["n512"]["allowed_turns_s"]
-    if prior_at and now_at > AT_REGRESSION * prior_at:
-        print(f"  WARNING: n512 allowed_turns_s regressed "
-              f"{now_at:.2f}s vs baseline {prior_at:.2f}s "
-              f"(> {AT_REGRESSION}x)")
-        emit("bench_routing_at_regression", now_at * 1e6,
-             f"baseline={prior_at}")
+    # perf-regression guards against the stored baseline
+    prior_512 = prior.get("sizes", {}).get("n512", {})
+    for key, bound, tag in (
+            ("allowed_turns_s", AT_REGRESSION, "at"),
+            ("array_select_s", SELECT_REGRESSION, "select")):
+        prior_v = prior_512.get(key)
+        now_v = result["sizes"]["n512"].get(key)
+        if prior_v and now_v and now_v > bound * prior_v:
+            print(f"  WARNING: n512 {key} regressed "
+                  f"{now_v:.2f}s vs baseline {prior_v:.2f}s (> {bound}x)")
+            emit(f"bench_routing_{tag}_regression", now_v * 1e6,
+                 f"baseline={prior_v}")
     if prior.get("sizes", {}).get("n64", {}).get("speedup"):
         print(f"  prior n64 speedup: {prior['sizes']['n64']['speedup']}x")
     if json_path:
-        prior_full = prior.get("sizes", {}).get("n1728")
-        if not full and prior_full:      # keep the 12^3 record around
-            result["sizes"]["n1728"] = prior_full
+        for keep in ("n1728", "n4096"):     # keep the --full records around
+            prior_full = prior.get("sizes", {}).get(keep)
+            if not full and prior_full and keep not in result["sizes"]:
+                result["sizes"][keep] = prior_full
         Path(json_path).write_text(json.dumps(result, indent=2) + "\n")
         print(f"  wrote {json_path}")
     return result

@@ -25,10 +25,14 @@ def main() -> None:
                          "saturation points) and BENCH_routing.json "
                          "(routing-engine wall-clock at 64/256/512 chips "
                          "incl. the batched allowed-turns admission "
-                         "breakdown and, with --full, the 1728-chip 12^3 "
-                         "end-to-end entry; regressions >1.5x on the 8^3 "
-                         "allowed_turns_s vs the stored baseline print a "
-                         "WARNING line)")
+                         "breakdown, per-stage select splits for the "
+                         "array and streaming sharded engines, and VC "
+                         "greedy-dead-end counters; with --full also the "
+                         "1728-chip 12^3 and 4096-chip 16^3 end-to-end "
+                         "entries routed by the sharded engine into the "
+                         "CSR PathTable; regressions >1.5x on the 8^3 "
+                         "allowed_turns_s or array_select_s vs the "
+                         "stored baseline print a WARNING line)")
     args = ap.parse_args()
 
     from benchmarks import (bench_netsim, bench_routing, fig1_smallgraphs,

@@ -27,6 +27,15 @@ def dead_channels_for_color(at: ATResult, color: int) -> set:
     return set(np.nonzero(ch.color == color)[0].tolist())
 
 
+def fault_region_nodes(at: ATResult, color: int) -> np.ndarray:
+    """Nodes incident to the failed OCS's links -- the impaired region
+    that fault-correlated recovery traffic clusters around
+    (:meth:`repro.core.traffic.TrafficPattern.fault_correlated`)."""
+    ch = at.channels
+    dead = ch.color == color
+    return np.unique(np.concatenate([ch.src[dead], ch.dst[dead]]))
+
+
 def fault_tolerance_certificate(topo: Topology, lam: float, f: int = 1
                                 ) -> Dict[str, float]:
     """Appendix D: t_max <= min(floor(32 n lambda), 48)."""

@@ -40,7 +40,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.pathtable import MAXHOP, PathTable
+from repro.core.pathtable import MAXHOP, CSRPathTable, PathTable
 from repro.core.routing import ATResult, Channels, RoutingResult
 from repro.core.topology import Topology
 from repro.core.traffic import CompiledTraffic, TrafficPattern
@@ -48,32 +48,47 @@ from repro.core.traffic import CompiledTraffic, TrafficPattern
 
 @dataclasses.dataclass
 class SimTables:
-    """Dense static routing tables for the simulator."""
+    """Static routing tables for the simulator.
+
+    Accepts either path-table layout; the packed CSR form is kept as-is
+    (statistics, verification and table plumbing all work on it) and is
+    densified lazily on first access to ``path``/``vcs``/``hops`` -- the
+    dense gather arrays only exist once a simulation kernel actually
+    needs them, so a 16^3 route-and-verify pipeline never pays the
+    ``n^2 * MAXHOP`` allocation.
+    """
     n: int
     n_ch: int
     n_vc: int
     ch_dst: np.ndarray                  # (C,)
-    table: PathTable
+    table: Union[PathTable, CSRPathTable]
+
+    def _dense(self) -> PathTable:
+        if isinstance(self.table, CSRPathTable):
+            self.table = self.table.to_dense()
+        return self.table
 
     @property
     def path(self) -> np.ndarray:
-        return self.table.path
+        return self._dense().path
 
     @property
     def vcs(self) -> np.ndarray:
-        return self.table.vcs
+        return self._dense().vcs
 
     @property
     def hops(self) -> np.ndarray:
-        return self.table.hops
+        return self._dense().hops
 
 
 def build_tables(topo: Topology,
-                 table: Union[PathTable, RoutingResult]) -> SimTables:
-    """Packed PathTable (or a RoutingResult carrying one) -> SimTables.
+                 table: Union[PathTable, CSRPathTable, RoutingResult]
+                 ) -> SimTables:
+    """Packed path table (or a RoutingResult carrying one) -> SimTables.
 
     No per-pair python loops: the table arrives already packed from path
-    selection / DOR construction / VC allocation.
+    selection / DOR construction / VC allocation, in either the dense or
+    the CSR layout.
     """
     if isinstance(table, RoutingResult):
         table = table.table
@@ -439,21 +454,25 @@ def dor_tables(topo: Topology, n_vc: int = 2) -> SimTables:
 
 
 def at_tables(topo: Topology, at: ATResult, routed: RoutingResult,
-              balance: Optional[bool] = True) -> SimTables:
+              balance: Optional[bool] = True,
+              stats: Optional[dict] = None) -> SimTables:
     """VC-allocate the routed paths and build simulator tables.
 
     Works on a copy of ``routed.table`` so the caller's RoutingResult is
     not mutated and the returned SimTables cannot be rewritten by later
-    allocations on the same result.
+    allocations on the same result. Both table layouts pass through
+    unchanged (a CSR table stays CSR).
 
     ``balance=None`` skips re-allocation and keeps the VC assignment
-    already in the table -- the array path-selection engine emits each
-    winning candidate's BFS state-path VCs, which are valid by
+    already in the table -- the array and sharded path-selection engines
+    emit each winning candidate's BFS state-path VCs, which are valid by
     construction (fast path for large pods / fault sweeps where the
-    balanced re-allocation is not needed)."""
+    balanced re-allocation is not needed). ``stats`` is forwarded to
+    :func:`~repro.core.vcalloc.allocate_vcs` (greedy dead-end
+    counters)."""
     from repro.core.vcalloc import allocate_vcs
     table = routed.table.copy()
     if balance is not None:
-        allocate_vcs(at, table, balance=balance)
+        allocate_vcs(at, table, balance=balance, stats=stats)
     table.n_vc = at.n_vc
     return build_tables(topo, table)

@@ -1,6 +1,6 @@
-"""Packed-array path representation for the routing -> simulation pipeline.
+"""Packed-array path representations for the routing -> simulation pipeline.
 
-``PathTable`` is the single path/VC representation produced by path
+``PathTable`` is the dense path/VC representation produced by path
 selection (`routing.select_paths`), DOR construction (`netsim.dor_paths`)
 and VC allocation (`vcalloc.allocate_vcs`), and consumed directly by the
 cycle-level simulator (`netsim.build_tables`). It packs every (src, dst)
@@ -15,6 +15,17 @@ structures on the hot path) and all aggregate statistics -- per-channel
 loads, L_max, average hops -- are vectorised numpy reductions. Dict views
 exist only as explicit API edges (:meth:`as_dicts` / :meth:`from_dicts`)
 for interop and debugging.
+
+``CSRPathTable`` is the packed sparse variant for large pods: the dense
+layout allocates ``n * n * MAXHOP`` slots no matter how long routes
+actually are (2.7 GB of channel ids alone at 16^3), while the CSR form
+stores one entry per real hop -- per-source flow offsets, per-flow hop
+offsets, and concatenated channel / VC arrays. It is what the streaming
+per-source-shard selection engine emits, exposes the same statistics API,
+and round-trips losslessly through :meth:`CSRPathTable.to_dense` /
+:meth:`CSRPathTable.from_dense` (``build_tables`` accepts either form and
+densifies lazily only when a simulator kernel actually needs the dense
+gather tables).
 """
 from __future__ import annotations
 
@@ -126,3 +137,167 @@ class PathTable:
         for (s, d), p in paths.items():
             t.set_path(s, d, list(p), None if vcs is None else vcs[(s, d)])
         return t
+
+
+# ---------------------------------------------------------------------------
+# Packed CSR variant: per-source flow offsets + concatenated hop arrays
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CSRPathTable:
+    """Sparse path/VC table: memory scales with total routed hops, not
+    ``n^2 * MAXHOP``.
+
+    Flows are stored in row-major ``(src, dst)`` order:
+
+        src_indptr: (n + 1,)  int64   flow range of each source
+        dst:        (F,)      int32   destination of each flow
+        hop_indptr: (F + 1,)  int64   hop range of each flow
+        chan:       (H,)      int32   concatenated channel ids
+        vc:         (H,)      int8    concatenated per-hop VCs
+
+    ``H`` is the total hop count over all routed flows. Unrouted pairs
+    simply have no flow entry (self-pairs never do).
+    """
+    n: int
+    n_ch: int
+    n_vc: int
+    src_indptr: np.ndarray
+    dst: np.ndarray
+    hop_indptr: np.ndarray
+    chan: np.ndarray
+    vc: np.ndarray
+
+    # ---- construction -----------------------------------------------------
+
+    def copy(self) -> "CSRPathTable":
+        return CSRPathTable(self.n, self.n_ch, self.n_vc,
+                            self.src_indptr.copy(), self.dst.copy(),
+                            self.hop_indptr.copy(), self.chan.copy(),
+                            self.vc.copy())
+
+    @property
+    def n_flows(self) -> int:
+        return len(self.dst)
+
+    @property
+    def flow_src(self) -> np.ndarray:
+        """(F,) source of each flow, expanded from the CSR offsets."""
+        return np.repeat(np.arange(self.n, dtype=np.int32),
+                         np.diff(self.src_indptr))
+
+    @property
+    def flow_len(self) -> np.ndarray:
+        """(F,) hop count of each flow."""
+        return np.diff(self.hop_indptr).astype(np.int32)
+
+    @property
+    def hops(self) -> np.ndarray:
+        """Dense ``(n, n)`` hop-count matrix (API-edge parity with the
+        dense table; materialised per access -- don't call in loops)."""
+        h = np.zeros((self.n, self.n), np.int32)
+        h[self.flow_src, self.dst] = self.flow_len
+        return h
+
+    @staticmethod
+    def from_dense(t: PathTable) -> "CSRPathTable":
+        """Pack a dense table; exact inverse of :meth:`to_dense`."""
+        ss, dd = np.nonzero(t.hops > 0)             # row-major == sorted
+        lens = t.hops[ss, dd].astype(np.int64)
+        hop_indptr = np.zeros(len(ss) + 1, np.int64)
+        np.cumsum(lens, out=hop_indptr[1:])
+        W = int(lens.max()) if len(lens) else 1
+        live = np.arange(W)[None, :] < lens[:, None]
+        return CSRPathTable(
+            t.n, t.n_ch, t.n_vc,
+            src_indptr=np.searchsorted(ss, np.arange(t.n + 1)
+                                       ).astype(np.int64),
+            dst=dd.astype(np.int32),
+            hop_indptr=hop_indptr,
+            chan=t.path[ss, dd, :W][live].astype(np.int32),
+            vc=t.vcs[ss, dd, :W][live].astype(np.int8))
+
+    def to_dense(self) -> PathTable:
+        """Materialise the dense ``(n, n, MAXHOP)`` form (simulator
+        kernels gather from it; large pods should stay CSR until then)."""
+        t = PathTable.empty(self.n, self.n_ch, self.n_vc)
+        lens = self.flow_len.astype(np.int64)
+        if not len(lens):
+            return t
+        ss = self.flow_src.astype(np.int64)
+        dd = self.dst.astype(np.int64)
+        pos = np.arange(len(self.chan)) - np.repeat(self.hop_indptr[:-1],
+                                                    lens)
+        fs, fd = np.repeat(ss, lens), np.repeat(dd, lens)
+        t.path[fs, fd, pos] = self.chan
+        t.vcs[fs, fd, pos] = self.vc
+        t.hops[ss, dd] = lens
+        return t
+
+    # ---- block access (vcalloc / verification hot path) -------------------
+
+    def block_paths(self, lo: int, hi: int) -> Tuple[np.ndarray, np.ndarray,
+                                                     np.ndarray]:
+        """Flows ``lo:hi`` as padded arrays: ``(chan (B, W), vc (B, W),
+        lens (B,))``; ``chan`` padded with -1."""
+        lens = np.diff(self.hop_indptr[lo:hi + 1]).astype(np.int64)
+        B = hi - lo
+        W = int(lens.max()) if B and lens.size else 1
+        P = np.full((B, W), -1, np.int64)
+        V = np.zeros((B, W), np.int8)
+        pos = np.arange(W)[None, :]
+        live = pos < lens[:, None]
+        idx = self.hop_indptr[lo:hi, None] + pos
+        P[live] = self.chan[idx[live]]
+        V[live] = self.vc[idx[live]]
+        return P, V, lens
+
+    def set_block_vcs(self, lo: int, hi: int, V: np.ndarray,
+                      lens: np.ndarray) -> None:
+        """Write padded per-hop VCs ``V (B, W)`` back for flows
+        ``lo:hi``."""
+        W = V.shape[1]
+        pos = np.arange(W)[None, :]
+        live = pos < lens[:, None]
+        idx = self.hop_indptr[lo:hi, None] + pos
+        self.vc[idx[live]] = V[live].astype(np.int8)
+
+    # ---- vectorised statistics (PathTable API parity) ---------------------
+
+    def routed_mask(self) -> np.ndarray:
+        m = np.zeros((self.n, self.n), bool)
+        m[self.flow_src, self.dst] = True
+        return m
+
+    def n_routed(self) -> int:
+        return self.n_flows
+
+    def loads(self) -> np.ndarray:
+        return np.bincount(self.chan,
+                           minlength=self.n_ch).astype(np.float64)
+
+    def l_max(self) -> float:
+        loads = self.loads()
+        return float(loads.max()) if loads.size else 0.0
+
+    def avg_hops(self) -> float:
+        lens = self.flow_len
+        return float(lens.mean()) if len(lens) else 0.0
+
+    def vc_hop_counts(self) -> np.ndarray:
+        return np.bincount(self.vc.astype(np.int64), minlength=self.n_vc)
+
+    # ---- dict views (API edges only) --------------------------------------
+
+    def as_dicts(self) -> Tuple[Dict[Tuple[int, int], Tuple[int, ...]],
+                                Dict[Tuple[int, int], List[int]]]:
+        paths: Dict[Tuple[int, int], Tuple[int, ...]] = {}
+        vcs: Dict[Tuple[int, int], List[int]] = {}
+        src = self.flow_src
+        for f in range(self.n_flows):
+            lo, hi = int(self.hop_indptr[f]), int(self.hop_indptr[f + 1])
+            key = (int(src[f]), int(self.dst[f]))
+            paths[key] = tuple(int(c) for c in self.chan[lo:hi])
+            vcs[key] = [int(v) for v in self.vc[lo:hi]]
+        return paths, vcs

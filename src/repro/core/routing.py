@@ -70,12 +70,13 @@ blocks and produces the *identical* allowed set:
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import defaultdict, deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.pathtable import MAXHOP, PathTable
+from repro.core.pathtable import MAXHOP, CSRPathTable, PathTable
 from repro.core.topology import Topology
 
 
@@ -1269,6 +1270,106 @@ class CandidateSet:
     unreachable: int
 
 
+def _walk_flows(sg: StateGraph, n: int, n_vc: int, SEN: int,
+                dist: np.ndarray, best: np.ndarray, src_ids: np.ndarray,
+                fb: np.ndarray, fd: np.ndarray, flen: np.ndarray,
+                kcap: np.ndarray, K: int
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorised backward parent walk for the flows ``(fb, fd)`` of one
+    source chunk (``dist``/``best`` rows indexed by ``fb``; ``src_ids``
+    maps rows to global source ids).
+
+    ``kcap`` is the per-flow walker budget: slot ``k`` of a flow is
+    walked iff ``k < kcap[f]``, and every walked slot is *identical* to
+    the corresponding slot of a full-``K`` walk (the budget truncates the
+    slot range, it never changes a walker's hash rotation or code), so
+    re-walking a flow with a larger budget reproduces its earlier slots
+    -- the property the streaming engine's refinement sweep relies on.
+
+    K walkers per flow, round-robin over end states; each walker's
+    mixed-radix code picks parents so distinct codes -> distinct paths.
+    Raw codes always favour parent 0, which correlates every flow's
+    candidates onto the same low-id channels and skews the loads the
+    min-max selector has to balance -- so both the end-state round-robin
+    and each parent digit are rotated by a hash of (flow, decision
+    point). Walkers of one flow at the same decision point share the
+    rotation, so distinctness is unaffected.
+
+    Returns SEN-padded ``chan (F_c, K, Lmax)``, ``vc`` and ``k_valid``
+    (budget mask minus within-flow duplicates).
+    """
+    S = sg.n_states
+    Lmax = int(flen.max())
+    # arrival states achieving the per-destination best distance
+    tgt = best[:, sg.dst_node]                           # (B, S)
+    bb, st = np.nonzero((dist == tgt) & (dist > 0))
+    key = bb * n + sg.dst_node[st]
+    grp = np.argsort(key, kind="stable")
+    st_sorted, key_sorted = st[grp], key[grp]
+    fkey = fb * n + fd
+    off = np.searchsorted(key_sorted, fkey)
+    cnt = np.searchsorted(key_sorted, fkey, side="right") - off
+    fhash = ((src_ids[fb].astype(np.uint64) * np.uint64(0x9E3779B1)
+              + fd.astype(np.uint64) * np.uint64(0x85EBCA77))
+             >> np.uint64(7))
+    Fc = len(fb)
+    kcap = np.asarray(kcap, np.int64)
+    wstart = np.cumsum(kcap) - kcap
+    Wr = int(kcap.sum())
+    wflow = np.repeat(np.arange(Fc), kcap)
+    wk = np.arange(Wr) - np.repeat(wstart, kcap)         # slot per walker
+    start = st_sorted[off[wflow]
+                      + ((wk + fhash[wflow]) % cnt[wflow])
+                      .astype(np.int64)]
+    code = (wk // cnt[wflow]).astype(np.int64)
+    cur = start.astype(np.int64)
+    wrow = fb[wflow]
+    wlen = flen[wflow]
+    whash = fhash[wflow]
+    chan_buf = np.full((Wr, Lmax), SEN, np.int32)
+    vc_buf = np.zeros((Wr, Lmax), np.int8)
+    chan_buf[np.arange(Wr), wlen - 1] = cur // n_vc
+    vc_buf[np.arange(Wr), wlen - 1] = (cur % n_vc).astype(np.int8)
+    for lvl in range(Lmax, 1, -1):
+        act = np.nonzero(wlen >= lvl)[0]
+        par = sg.rev_pad[cur[act]].astype(np.int64)      # (A, D)
+        ok = (par >= 0) & (dist[wrow[act][:, None],
+                                np.clip(par, 0, S - 1)] == lvl - 1)
+        npar = ok.sum(axis=1)                            # >= 1 (BFS)
+        rot = ((whash[act] + cur[act].astype(np.uint64)
+                * np.uint64(0x9E3779B9)
+                + np.uint64(lvl) * np.uint64(0xC2B2AE35))
+               % npar.astype(np.uint64)).astype(np.int64)
+        pick = (code[act] + rot) % npar
+        code[act] //= npar
+        sel = ok & (np.cumsum(ok, axis=1) == (pick + 1)[:, None])
+        cur[act] = par[np.arange(len(act)), sel.argmax(axis=1)]
+        chan_buf[act, lvl - 2] = (cur[act] // n_vc).astype(np.int32)
+        vc_buf[act, lvl - 2] = (cur[act] % n_vc).astype(np.int8)
+    # dedupe within each flow's slots (64-bit polynomial path hash;
+    # padding is identical across a flow's slots so it cancels out)
+    h = np.zeros(Wr, np.uint64)
+    mul = np.uint64(0x9E3779B97F4A7C15)
+    for pos in range(Lmax):
+        stcol = (chan_buf[:, pos].astype(np.uint64) * np.uint64(n_vc)
+                 + vc_buf[:, pos].astype(np.uint64))
+        h = h * mul + stcol + np.uint64(1)
+    chan = np.full((Fc, K, Lmax), SEN, np.int32)
+    vc = np.zeros((Fc, K, Lmax), np.int8)
+    chan[wflow, wk] = chan_buf
+    vc[wflow, wk] = vc_buf
+    hh = np.zeros((Fc, K), np.uint64)
+    hh[wflow, wk] = h
+    valid_slot = np.zeros((Fc, K), bool)
+    valid_slot[wflow, wk] = True
+    k_valid = valid_slot.copy()
+    for k in range(1, K):
+        dup = (hh[:, k:k + 1] == hh[:, :k]) & valid_slot[:, :k] \
+            & valid_slot[:, k:k + 1]
+        k_valid[:, k] &= ~dup.any(axis=1)
+    return chan, vc, k_valid
+
+
 def enumerate_candidates(at: ATResult, K: int = 8,
                          dead_channels: Optional[set] = None,
                          source_chunk: int = 64) -> CandidateSet:
@@ -1278,7 +1379,6 @@ def enumerate_candidates(at: ATResult, K: int = 8,
     sg = at.state_graph()
     n, n_vc = ch.n_nodes, at.n_vc
     SEN = ch.n
-    S = sg.n_states
     pieces: List[Tuple] = []
     unreachable = 0
     width = 1
@@ -1295,70 +1395,10 @@ def enumerate_candidates(at: ATResult, K: int = 8,
         if Lmax > MAXHOP:
             raise ValueError(f"shortest path of {Lmax} hops exceeds "
                              f"MAXHOP={MAXHOP}")
-        # arrival states achieving the per-destination best distance
-        tgt = best[:, sg.dst_node]                           # (B, S)
-        bb, st = np.nonzero((dist == tgt) & (dist > 0))
-        key = bb * n + sg.dst_node[st]
-        grp = np.argsort(key, kind="stable")
-        st_sorted, key_sorted = st[grp], key[grp]
-        fkey = fb * n + fd                                   # ascending
-        off = np.searchsorted(key_sorted, fkey)
-        cnt = np.searchsorted(key_sorted, fkey, side="right") - off
-        # K walkers per flow, round-robin over end states; each walker's
-        # mixed-radix code picks parents so distinct codes -> distinct
-        # paths. Raw codes always favour parent 0, which correlates every
-        # flow's candidates onto the same low-id channels and skews the
-        # loads the selector has to balance -- so both the end-state
-        # round-robin and each parent digit are rotated by a hash of
-        # (flow, decision point). Walkers of one flow at the same decision
-        # point share the rotation, so distinctness is unaffected.
-        ks = np.arange(K)
-        fhash = ((srcs[fb].astype(np.uint64) * np.uint64(0x9E3779B1)
-                  + fd.astype(np.uint64) * np.uint64(0x85EBCA77))
-                 >> np.uint64(7))
-        start = st_sorted[off[:, None]
-                          + ((ks[None, :] + fhash[:, None]) % cnt[:, None])
-                          .astype(np.int64)]
-        code = (ks[None, :] // cnt[:, None]).astype(np.int64).ravel()
-        cur = start.ravel().astype(np.int64)
-        W = len(cur)
-        wrow = np.repeat(fb, K)
-        wlen = np.repeat(flen, K)
-        whash = np.repeat(fhash, K)
-        chan_buf = np.full((W, Lmax), SEN, np.int32)
-        vc_buf = np.zeros((W, Lmax), np.int8)
-        chan_buf[np.arange(W), wlen - 1] = cur // n_vc
-        vc_buf[np.arange(W), wlen - 1] = (cur % n_vc).astype(np.int8)
-        for lvl in range(Lmax, 1, -1):
-            act = np.nonzero(wlen >= lvl)[0]
-            par = sg.rev_pad[cur[act]].astype(np.int64)      # (A, D)
-            ok = (par >= 0) & (dist[wrow[act][:, None],
-                                    np.clip(par, 0, S - 1)] == lvl - 1)
-            npar = ok.sum(axis=1)                            # >= 1 (BFS)
-            rot = ((whash[act] + cur[act].astype(np.uint64)
-                    * np.uint64(0x9E3779B9)
-                    + np.uint64(lvl) * np.uint64(0xC2B2AE35))
-                   % npar.astype(np.uint64)).astype(np.int64)
-            pick = (code[act] + rot) % npar
-            code[act] //= npar
-            sel = ok & (np.cumsum(ok, axis=1) == (pick + 1)[:, None])
-            cur[act] = par[np.arange(len(act)), sel.argmax(axis=1)]
-            chan_buf[act, lvl - 2] = (cur[act] // n_vc).astype(np.int32)
-            vc_buf[act, lvl - 2] = (cur[act] % n_vc).astype(np.int8)
-        # dedupe within each flow's K slots (64-bit polynomial path hash;
-        # padding is identical across a flow's slots so it cancels out)
-        h = np.zeros(W, np.uint64)
-        mul = np.uint64(0x9E3779B97F4A7C15)
-        for pos in range(Lmax):
-            stcol = (chan_buf[:, pos].astype(np.uint64) * np.uint64(n_vc)
-                     + vc_buf[:, pos].astype(np.uint64))
-            h = h * mul + stcol + np.uint64(1)
-        hh = h.reshape(-1, K)
-        k_valid = np.ones(hh.shape, bool)
-        for k in range(1, K):
-            k_valid[:, k] &= ~(hh[:, k:k + 1] == hh[:, :k]).any(axis=1)
-        pieces.append((srcs[fb], fd, chan_buf.reshape(-1, K, Lmax),
-                       vc_buf.reshape(-1, K, Lmax), flen, k_valid))
+        kcap = np.full(len(fb), K, np.int64)
+        chan_c, vc_c, k_valid = _walk_flows(sg, n, n_vc, SEN, dist, best,
+                                            srcs, fb, fd, flen, kcap, K)
+        pieces.append((srcs[fb], fd, chan_c, vc_c, flen, k_valid))
         width = max(width, Lmax)
     if not pieces:
         z = np.zeros(0, np.int64)
@@ -1390,11 +1430,12 @@ def enumerate_candidates(at: ATResult, K: int = 8,
 
 @dataclasses.dataclass
 class RoutingResult:
-    table: PathTable                                # packed (s, d) routes
-    loads: np.ndarray                               # per-channel load
+    table: PathTable                       # packed (s, d) routes (dense
+    loads: np.ndarray                      # or CSR); per-channel load
     l_max: float
     avg_hops: float
     unreachable: int
+    stats: Optional[dict] = None           # per-stage timings / counters
 
     @property
     def paths(self) -> Dict[Tuple[int, int], Tuple[int, ...]]:
@@ -1406,7 +1447,10 @@ class RoutingResult:
 def select_paths(at: ATResult, K: int = 8, seed: int = 0,
                  dead_channels: Optional[set] = None,
                  local_search_rounds: int = 3,
-                 engine: str = "array", block: int = 1024) -> RoutingResult:
+                 engine: str = "array", block: Optional[int] = None,
+                 shard_sources: int = 64, rounds: int = 4,
+                 k_min: Optional[int] = None,
+                 refine_cap: int = 300_000) -> RoutingResult:
     """Min-max channel load selection: greedy + local search (the paper
     solves an ILP with Gurobi; we report the achieved L_max against the
     lower bound so the optimality gap is visible).
@@ -1419,14 +1463,40 @@ def select_paths(at: ATResult, K: int = 8, seed: int = 0,
     candidate's per-hop VCs (from its BFS state path) are written into the
     table alongside the channels. ``engine="reference"`` is the seed's
     per-flow python loop, kept as the equivalence/benchmark oracle.
+
+    ``engine="sharded"`` is the streaming per-source-shard engine for
+    large pods (:func:`_select_sharded`): flows are processed shard-at-a-
+    time through a fused candidate-walk -> damped greedy pass coordinated
+    by a persistent global load vector, with adaptive per-flow walker
+    budgets (``k_min`` for cold flows, full ``K`` for flows touching the
+    running hot set) and a bounded cross-shard refinement sweep over the
+    hottest channels. It emits a packed
+    :class:`~repro.core.pathtable.CSRPathTable` (memory scales with total
+    hops, not ``n^2 * MAXHOP``), which the rest of the pipeline consumes
+    directly.
     """
     if engine == "reference":
         return _select_paths_reference(at, K=K, seed=seed,
                                        dead_channels=dead_channels,
                                        local_search_rounds=local_search_rounds)
+    if engine == "sharded":
+        return _select_sharded(at, K=K, seed=seed,
+                               dead_channels=dead_channels,
+                               local_search_rounds=local_search_rounds,
+                               block=block or 512,
+                               shard_sources=shard_sources,
+                               rounds=rounds, k_min=k_min,
+                               refine_cap=refine_cap)
+    if engine != "array":
+        raise ValueError(f"unknown engine {engine!r}")
+    t0 = time.time()
     cs = enumerate_candidates(at, K=K, dead_channels=dead_channels)
-    return _select_array(at, cs, seed=seed,
-                         local_search_rounds=local_search_rounds, block=block)
+    t_enum = time.time() - t0
+    out = _select_array(at, cs, seed=seed,
+                        local_search_rounds=local_search_rounds,
+                        block=block or 1024)
+    out.stats["enumerate_s"] = round(t_enum, 3)
+    return out
 
 
 def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
@@ -1439,7 +1509,7 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
     F, K, L = cs.chan.shape
     if F == 0:
         return RoutingResult(table, np.zeros(ch.n), 0.0, 0.0,
-                             cs.unreachable)
+                             cs.unreachable, stats={})
     cand = cs.chan
     loads = np.zeros(SEN + 1, np.int64)
     BIG = np.int64(F) * L + 1
@@ -1448,6 +1518,8 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
     order = rng.permutation(F)
     chosen = np.zeros(F, np.int64)
     ar = np.arange
+    stats: dict = {}
+    t0 = time.time()
 
     # greedy pass: whole flow blocks against the running load vector
     for i in range(0, F, block):
@@ -1459,6 +1531,8 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
         chosen[b] = c
         np.add.at(loads, cand[b, c].ravel(), 1)
         loads[SEN] = 0
+    stats["greedy_s"] = round(time.time() - t0, 3)
+    t0 = time.time()
 
     # local search: block-parallel re-assignment with exact own-load
     # removal (candidate loads minus the flow's current path multiplicity)
@@ -1485,6 +1559,8 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
                 changed += len(mv)
         if changed == 0:
             break
+    stats["local_search_s"] = round(time.time() - t0, 3)
+    t0 = time.time()
 
     # hot-set peel: vectorised replacement for the reference's sequential
     # hot-channel walk. Each round takes every flow crossing a channel at
@@ -1529,6 +1605,8 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
                 break
     if best_snap[2] < loads[:SEN].max():
         loads, chosen = best_snap[0], best_snap[1]
+    stats["hot_peel_s"] = round(time.time() - t0, 3)
+    t0 = time.time()
 
     # final sequential hot-channel walk (the reference's exact move rule):
     # the peel above leaves only moves that require cascading through
@@ -1566,6 +1644,7 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
             stall += 1
         if not improved or stall >= 6:
             break
+    stats["hot_walk_s"] = round(time.time() - t0, 3)
 
     sel = cand[ar(F), chosen]
     selvc = cs.vc[ar(F), chosen]
@@ -1576,7 +1655,394 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
     return RoutingResult(table, loads_final,
                          float(loads_final.max()) if F else 0.0,
                          float(cs.length.mean()) if F else 0.0,
-                         cs.unreachable)
+                         cs.unreachable, stats=stats)
+
+
+def _hot_pool(loads: np.ndarray, chan_flat: np.ndarray,
+              flow_of_hop: np.ndarray, cap: int, SEN: int
+              ) -> Tuple[np.ndarray, int]:
+    """Flows crossing the hottest channels, bounded by ``cap``.
+
+    The threshold is the lowest load such that the summed loads of all
+    channels at or above it stay within ``cap`` -- the sum bounds the
+    pool size from above (a flow crossing j hot channels is counted j
+    times), so the re-walked candidate pool is memory-bounded no matter
+    how flat the load distribution is.
+    """
+    l = loads[:SEN]
+    live = np.nonzero(l > 1)[0]
+    if not len(live):
+        return np.zeros(0, np.int64), 0
+    order = live[np.argsort(-l[live], kind="stable")]
+    k = int(np.searchsorted(np.cumsum(l[order]), cap, side="right"))
+    hotc = order[:max(k, 1)]        # top-k channels, not a threshold --
+    thresh = int(l[hotc].min())     # load ties can't overshoot the cap
+    hot = np.zeros(SEN + 1, bool)
+    hot[hotc] = True
+    return np.unique(flow_of_hop[hot[chan_flat]]).astype(np.int64), thresh
+
+
+def _select_sharded(at: ATResult, K: int = 8, seed: int = 0,
+                    dead_channels: Optional[set] = None,
+                    local_search_rounds: int = 3, block: int = 512,
+                    shard_sources: int = 64, rounds: int = 4,
+                    k_min: Optional[int] = None,
+                    refine_cap: int = 300_000, damp: float = 1.0,
+                    hot_load_frac: float = 0.97,
+                    refine_iters: int = 2,
+                    refine_block: int = 192) -> RoutingResult:
+    """Streaming per-source-shard path selection (the large-pod engine).
+
+    The whole-array engine materialises every flow's candidates at once
+    (``F = n (n-1)`` rows), which dominates wall-clock and memory past
+    ~10^3 nodes. Here the flow problem is decomposed into coordinated
+    per-source shards:
+
+    - **Phase 0** runs the batched state BFS shard-at-a-time and keeps
+      only the ``(B, S)`` distance fields plus the per-flow lengths --
+      enough to rebuild any flow's candidates on demand -- and lays out
+      the packed :class:`CSRPathTable` skeleton (per-source offsets +
+      concatenated hop arrays) that selection writes into in place.
+    - **Streaming rounds**: each round walks and greedily assigns a
+      random 1/``rounds`` slice of every shard's flows against the
+      *persistent global load vector*, so later decisions see an
+      unbiased sample of the final landscape (a single source-ordered
+      pass is ~20% worse: early shards dump load geographically).
+      Residual-load damping adds the expected remaining demand -- a
+      prior bootstrapped from the candidate densities walked so far,
+      scaled to the unprocessed flow fraction -- which stops early
+      slices from herding onto currently-cold channels.
+    - **Adaptive walker budgets**: flows touching the running hot set
+      (endpoints of near-``l_max`` channels) walk the full ``K``
+      candidates; short or uncontested flows walk ``k_min``. Budgeted
+      slots are bit-identical to the full walk's slots, so the
+      refinement sweep can re-walk any flow at full ``K`` and recover
+      its current choice exactly.
+    - **Cross-shard refinement**: a bounded sweep over the hottest
+      channels -- flows crossing them (capped by ``refine_cap``) are
+      re-walked at full ``K`` and re-optimised with the array engine's
+      exact own-load-removal local search, safe hot-set peel and
+      sequential hot-channel walk, all snapshot-guarded so ``l_max``
+      never regresses.
+
+    Emits a :class:`CSRPathTable` whose VC hops are the winning
+    candidates' BFS state paths (valid by construction); the balanced
+    re-allocation stays in :func:`repro.core.vcalloc.allocate_vcs`.
+    """
+    ch = at.channels
+    sg = at.state_graph()
+    n, n_vc = ch.n_nodes, at.n_vc
+    SEN = ch.n
+    if k_min is None:
+        k_min = max(2, K // 2)
+    k_min = max(1, min(k_min, K))
+    stats: dict = {"engine": "sharded", "rounds": rounds,
+                   "shard_sources": shard_sources, "k_min": k_min}
+    ar = np.arange
+
+    # ---- phase 0: per-shard BFS + CSR skeleton ---------------------------
+    t0 = time.time()
+    n_shards = (n + shard_sources - 1) // shard_sources
+    shard_dist: List[np.ndarray] = []
+    shard_best: List[np.ndarray] = []
+    shard_fb: List[np.ndarray] = []
+    shard_fd: List[np.ndarray] = []
+    shard_flen: List[np.ndarray] = []
+    gid0 = np.zeros(n_shards + 1, np.int64)
+    src_flow_counts = np.zeros(n, np.int64)
+    unreachable = 0
+    for si in range(n_shards):
+        s0 = si * shard_sources
+        srcs = np.arange(s0, min(s0 + shard_sources, n))
+        dist = state_bfs(at, srcs, dead_channels)
+        best = node_distances(at, srcs, dist=dist)
+        unreachable += int((best < 0).sum())
+        fb, fd = np.nonzero(best > 0)
+        flen = best[fb, fd].astype(np.int64)
+        if len(flen) and int(flen.max()) > MAXHOP:
+            raise ValueError(f"shortest path of {int(flen.max())} hops "
+                             f"exceeds MAXHOP={MAXHOP}")
+        shard_dist.append(dist)
+        shard_best.append(best.astype(np.int16))
+        shard_fb.append(fb.astype(np.int64))
+        shard_fd.append(fd.astype(np.int64))
+        shard_flen.append(flen)
+        gid0[si + 1] = gid0[si] + len(fb)
+        src_flow_counts[srcs] = np.bincount(fb, minlength=len(srcs))
+    F = int(gid0[-1])
+    flen_all = (np.concatenate(shard_flen) if F else
+                np.zeros(0, np.int64)).astype(np.int64)
+    dst_all = (np.concatenate(shard_fd) if F else
+               np.zeros(0, np.int64)).astype(np.int32)
+    src_indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(src_flow_counts, out=src_indptr[1:])
+    hop_indptr = np.zeros(F + 1, np.int64)
+    np.cumsum(flen_all, out=hop_indptr[1:])
+    chan_flat = np.zeros(int(hop_indptr[-1]), np.int32)
+    vc_flat = np.zeros(int(hop_indptr[-1]), np.int8)
+    chosen_k = np.zeros(F, np.int8)
+    stats["bfs_s"] = round(time.time() - t0, 3)
+    csr = CSRPathTable(n, SEN, n_vc, src_indptr, dst_all, hop_indptr,
+                       chan_flat, vc_flat)
+    if F == 0:
+        return RoutingResult(csr, np.zeros(SEN), 0.0, 0.0, unreachable,
+                             stats=stats)
+
+    # ---- streaming rounds: fused walk -> damped greedy -------------------
+    loads = np.zeros(SEN + 1, np.int64)
+    ehat = np.zeros(SEN + 1, np.float64)   # bootstrapped expected load
+    ehat_flows = 0
+    rng = np.random.default_rng(seed)
+    perms = [rng.permutation(len(fb)) for fb in shard_fb]
+    BIGF = float(np.int64(F) * max(int(flen_all.max()), 1) + 1)
+    t_walk = t_greedy = 0.0
+    done = 0
+    k_full_flows = 0
+    for r in range(rounds):
+        for si in range(n_shards):
+            fb, fd, flen = shard_fb[si], shard_fd[si], shard_flen[si]
+            Fc = len(fb)
+            idx = perms[si][Fc * r // rounds:Fc * (r + 1) // rounds]
+            if not len(idx):
+                continue
+            t1 = time.time()
+            s0 = si * shard_sources
+            srcs = np.arange(s0, min(s0 + shard_sources, n))
+            fl = flen[idx]
+            # adaptive budget: full K for flows touching the hot set
+            lm_run = int(loads[:SEN].max())
+            if lm_run > 1:
+                hotc = np.nonzero(
+                    loads[:SEN] >= max(2, int(hot_load_frac * lm_run)))[0]
+                hot_nodes = np.zeros(n, bool)
+                hot_nodes[ch.src[hotc]] = True
+                hot_nodes[ch.dst[hotc]] = True
+                hot_f = hot_nodes[s0 + fb[idx]] | hot_nodes[fd[idx]]
+            else:
+                hot_f = np.zeros(len(idx), bool)
+            kcap = np.where(hot_f, K, k_min)
+            kcap = np.minimum(kcap, np.where(fl == 1, 1,
+                                             np.where(fl == 2, 2, K)))
+            k_full_flows += int((kcap >= K).sum())
+            chan_c, vc_c, kv = _walk_flows(sg, n, n_vc, SEN,
+                                           shard_dist[si], shard_best[si],
+                                           srcs, fb[idx], fd[idx], fl,
+                                           kcap, K)
+            t_walk += time.time() - t1
+            t1 = time.time()
+            B, _, Lc = chan_c.shape
+            # fold this slice into the expected-load prior (uniform over
+            # each flow's valid slots), then damp the greedy with the
+            # scaled unprocessed remainder. Round 1 alone is an unbiased
+            # sample of every shard, so later rounds skip the scatter
+            # (it costs ~F*K*L adds) and reuse the round-1 estimate.
+            if r == 0 and damp > 0.0:
+                w = kv / kv.sum(axis=1)[:, None]
+                np.add.at(ehat, chan_c.ravel(),
+                          np.repeat(w.ravel(), Lc))
+                ehat[SEN] = 0.0
+                ehat_flows += B
+            scale = damp * (1.0 - done / F) * (F / max(ehat_flows, 1)) \
+                if ehat_flows else 0.0
+            chosen_local = np.zeros(B, np.int64)
+            for j in range(0, B, block):
+                bc = chan_c[j:j + block]
+                l = loads[bc].astype(np.float64)
+                if scale > 0.0:
+                    l += scale * ehat[bc]
+                cost = l.max(axis=2) * BIGF + l.sum(axis=2)
+                cost[~kv[j:j + block]] = np.inf
+                c = np.argmin(cost, axis=1)
+                chosen_local[j:j + block] = c
+                np.add.at(loads, bc[ar(len(c)), c].ravel(), 1)
+                loads[SEN] = 0
+            done += B
+            # write winners straight into the CSR skeleton
+            gid = gid0[si] + idx
+            sel = chan_c[ar(B), chosen_local]
+            selvc = vc_c[ar(B), chosen_local]
+            pos = ar(Lc)[None, :]
+            live = pos < fl[:, None]
+            flat = (hop_indptr[gid][:, None] + pos)[live]
+            chan_flat[flat] = sel[live]
+            vc_flat[flat] = selvc[live]
+            chosen_k[gid] = chosen_local
+            t_greedy += time.time() - t1
+    stats["walk_s"] = round(t_walk, 3)
+    stats["greedy_s"] = round(t_greedy, 3)
+    stats["k_full_flows"] = k_full_flows
+    stats["greedy_l_max"] = int(loads[:SEN].max())
+
+    # ---- cross-shard refinement over the hottest channels ----------------
+    t0 = time.time()
+    stats.update({"refine_pool": 0, "refine_moved": 0, "refine_iters": 0,
+                  "refine_thresh": 0})
+    if local_search_rounds > 0:
+        flow_of_hop = np.repeat(ar(F, dtype=np.int64), flen_all)
+        for _ in range(refine_iters):
+            lm_before = int(loads[:SEN].max())
+            pool, thresh = _hot_pool(loads, chan_flat, flow_of_hop,
+                                     refine_cap, SEN)
+            if not len(pool):
+                break
+            stats["refine_iters"] += 1
+            stats["refine_pool"] = max(stats["refine_pool"], len(pool))
+            stats["refine_thresh"] = thresh
+            # re-walk the pool at full K (cached distances; budgeted
+            # slots reproduce, so chosen_k still indexes correctly)
+            seg = np.searchsorted(pool, gid0)
+            parts = []
+            Lp = 1
+            for si in range(n_shards):
+                a, b = seg[si], seg[si + 1]
+                if a == b:
+                    continue
+                loc = pool[a:b] - gid0[si]
+                s0 = si * shard_sources
+                srcs = np.arange(s0, min(s0 + shard_sources, n))
+                fl = shard_flen[si][loc]
+                cc, vv, kvp = _walk_flows(
+                    sg, n, n_vc, SEN, shard_dist[si], shard_best[si],
+                    srcs, shard_fb[si][loc], shard_fd[si][loc], fl,
+                    np.full(len(loc), K, np.int64), K)
+                parts.append((cc, vv, kvp))
+                Lp = max(Lp, cc.shape[2])
+
+            def padc(a, fill):
+                if a.shape[2] == Lp:
+                    return a
+                out = np.full(a.shape[:2] + (Lp,), fill, a.dtype)
+                out[:, :, :a.shape[2]] = a
+                return out
+
+            candP = np.concatenate([padc(p[0], SEN) for p in parts])
+            vcP = np.concatenate([padc(p[1], 0) for p in parts])
+            kvP = np.concatenate([p[2] for p in parts])
+            P = len(pool)
+            pchosen = chosen_k[pool].astype(np.int64)
+            old_pchosen = pchosen.copy()
+            snap = (loads.copy(), pchosen.copy(), lm_before)
+            # exact own-load-removal local search over the pool (small
+            # blocks: concurrent same-block moves collide on the same
+            # cold channels, and the churn costs ~5% l_max at 1024)
+            for _ in range(local_search_rounds):
+                changed = 0
+                for i in range(0, P, refine_block):
+                    b = slice(i, min(i + refine_block, P))
+                    B2 = b.stop - b.start
+                    bc = candP[b]
+                    cur = bc[ar(B2), pchosen[b]]
+                    ladj = loads[bc] - (bc[:, :, :, None]
+                                        == cur[:, None, None, :]).sum(axis=3)
+                    ladj = np.where(bc == SEN, 0, ladj)
+                    cost = ladj.max(axis=2) * np.int64(BIGF) \
+                        + ladj.sum(axis=2)
+                    cost[~kvP[b]] = np.iinfo(np.int64).max
+                    newc = cost.argmin(axis=1)
+                    better = cost[ar(B2), newc] < cost[ar(B2), pchosen[b]]
+                    mv = np.nonzero(better)[0]
+                    if len(mv):
+                        np.add.at(loads, cur[mv].ravel(), -1)
+                        np.add.at(loads, bc[mv, newc[mv]].ravel(), 1)
+                        loads[SEN] = 0
+                        pchosen[i + mv] = newc[mv]
+                        changed += len(mv)
+                lm_now = int(loads[:SEN].max())
+                if lm_now < snap[2]:
+                    snap = (loads.copy(), pchosen.copy(), lm_now)
+                if changed == 0:
+                    break
+            # safe hot-set peel (single moves can never mint a new max)
+            stall = 0
+            for _ in range(64):
+                lm = int(loads[:SEN].max())
+                if lm <= 1:
+                    break
+                hot_mask = np.zeros(SEN + 1, bool)
+                hot_mask[:SEN][loads[:SEN] == lm] = True
+                sel = candP[ar(P), pchosen]
+                hf = np.nonzero(hot_mask[sel].any(axis=1))[0]
+                if not len(hf):
+                    break
+                bc = candP[hf]
+                cur = sel[hf]
+                ladj = loads[bc] - (bc[:, :, :, None]
+                                    == cur[:, None, None, :]).sum(axis=3)
+                ladj = np.where(bc == SEN, 0, ladj)
+                safe = (ladj <= lm - 2).all(axis=2) & kvP[hf]
+                cost = ladj.max(axis=2) * np.int64(BIGF) + ladj.sum(axis=2)
+                cost[~safe] = np.iinfo(np.int64).max
+                newc = cost.argmin(axis=1)
+                mv = np.nonzero(safe[ar(len(hf)), newc])[0]
+                if len(mv) == 0:
+                    break
+                np.add.at(loads, cur[mv].ravel(), -1)
+                np.add.at(loads, bc[mv, newc[mv]].ravel(), 1)
+                loads[SEN] = 0
+                pchosen[hf[mv]] = newc[mv]
+                lm_now = loads[:SEN].max()
+                if lm_now < snap[2]:
+                    snap = (loads.copy(), pchosen.copy(), int(lm_now))
+                    stall = 0
+                else:
+                    stall += 1
+                    if stall >= 4:
+                        break
+            if snap[2] < loads[:SEN].max():
+                loads, pchosen = snap[0].copy(), snap[1].copy()
+            # short sequential hot-channel walk (exact reference rule)
+            stall = 0
+            best_walk = int(loads[:SEN].max())
+            for _ in range(8):
+                improved = False
+                hot = int(np.argmax(loads[:SEN]))
+                hot_flows = np.nonzero(
+                    (candP[ar(P), pchosen] == hot).any(axis=1))[0]
+                rng.shuffle(hot_flows)
+                for f in hot_flows[:4096]:
+                    np.add.at(loads, candP[f, pchosen[f]], -1)
+                    loads[SEN] = 0
+                    l = loads[candP[f]]
+                    cost = l.max(axis=1) * np.int64(BIGF) + l.sum(axis=1)
+                    cost = np.where(kvP[f], cost, np.iinfo(np.int64).max)
+                    bestk = int(np.argmin(cost))
+                    if cost[bestk] >= cost[pchosen[f]]:
+                        bestk = int(pchosen[f])
+                    if bestk != pchosen[f]:
+                        improved = True
+                    pchosen[f] = bestk
+                    np.add.at(loads, candP[f, bestk], 1)
+                    loads[SEN] = 0
+                    if loads[:SEN].max() < loads[hot]:
+                        break
+                lm_now = int(loads[:SEN].max())
+                if lm_now < best_walk:
+                    best_walk, stall = lm_now, 0
+                else:
+                    stall += 1
+                if not improved or stall >= 3:
+                    break
+            # write the moved flows back into the CSR arrays
+            moved = np.nonzero(pchosen != old_pchosen)[0]
+            stats["refine_moved"] += len(moved)
+            if len(moved):
+                mg = pool[moved]
+                lens = flen_all[mg]
+                sel = candP[moved, pchosen[moved]]
+                selvc = vcP[moved, pchosen[moved]]
+                pos = ar(Lp)[None, :]
+                live = pos < lens[:, None]
+                flat = (hop_indptr[mg][:, None] + pos)[live]
+                chan_flat[flat] = sel[live]
+                vc_flat[flat] = selvc[live]
+                chosen_k[mg] = pchosen[moved]
+            if int(loads[:SEN].max()) >= lm_before:
+                break
+    stats["refine_s"] = round(time.time() - t0, 3)
+
+    loads_final = loads[:SEN].astype(np.float64)
+    return RoutingResult(csr, loads_final, float(loads_final.max()),
+                         float(flen_all.mean()), unreachable, stats=stats)
 
 
 def _select_paths_reference(at: ATResult, K: int = 8, seed: int = 0,

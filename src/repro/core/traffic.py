@@ -17,6 +17,11 @@ Built-in patterns:
 - ``hotspot``      -- a fraction of traffic targets a small hot set
 - ``from_demand``  -- weights from a :class:`repro.core.demand.WorkloadDemand`
                       (parallelization-derived: DP rings + in-cube TP/EP)
+- ``fault_correlated`` -- demand concentrated around a failed-OCS region
+                      (the nodes that lost links): recovery traffic --
+                      re-replication, checkpoint restore, re-sharding --
+                      clusters exactly where capacity just dropped, the
+                      adversarial case for fault re-routing (fig8)
 """
 from __future__ import annotations
 
@@ -173,6 +178,38 @@ class TrafficPattern:
         m = m + hotm / np.maximum(hot_mass, 1e-12) * frac
         return TrafficPattern(f"hotspot{len(hot)}", m,
                               src_rate=np.ones(n, np.float32))
+
+    @staticmethod
+    def fault_correlated(n: int, region: Sequence[int],
+                         frac: float = 0.5,
+                         src_boost: float = 2.0) -> "TrafficPattern":
+        """Demand concentrated on a failed-OCS region.
+
+        ``region`` is the set of nodes that lost links to the fault
+        (see :func:`repro.core.fault.fault_region_nodes`). Every source
+        sends ``frac`` of its traffic uniformly into the region and the
+        rest uniformly elsewhere -- recovery flows (re-replication,
+        checkpoint restore) target the impaired machines -- while
+        sources inside the region inject ``src_boost`` times the
+        baseline rate (they also re-send what the dead links dropped).
+        """
+        region = np.asarray(sorted(set(int(r) for r in region)), np.int64)
+        if not len(region) or len(region) >= n:
+            raise ValueError("fault region must be a proper non-empty "
+                             "subset of the nodes")
+        inm = np.zeros((n, n), np.float64)
+        inm[:, region] = 1.0
+        np.fill_diagonal(inm, 0.0)
+        out = np.ones((n, n), np.float64)
+        out[:, region] = 0.0
+        np.fill_diagonal(out, 0.0)
+        in_mass = inm.sum(axis=1, keepdims=True)
+        out_mass = out.sum(axis=1, keepdims=True)
+        m = inm / np.maximum(in_mass, 1e-12) * frac \
+            + out / np.maximum(out_mass, 1e-12) * (1.0 - frac)
+        rate = np.ones(n, np.float32)
+        rate[region] = src_boost
+        return TrafficPattern(f"fault{len(region)}", m, src_rate=rate)
 
     @staticmethod
     def from_demand(wd) -> "TrafficPattern":

@@ -1,0 +1,217 @@
+"""Equivalence suite for the streaming sharded selection engine and the
+packed CSR PathTable: distances and reachability must match the array
+engine exactly, min-max quality must stay within 5%, the CSR layout must
+round-trip the dense one losslessly, and the exact-lookahead VC
+allocation must reproduce the reference DFS policy bit for bit."""
+import numpy as np
+import pytest
+
+from repro.core import fault as F, netsim as NS, routing as R, \
+    topology as T, vcalloc as V
+from repro.core.pathtable import CSRPathTable, PathTable
+
+
+@pytest.fixture(scope="module", params=[(4, 4, 4), (4, 8, 8)])
+def pod_routed(request):
+    topo = T.pt(request.param)
+    at = R.allowed_turns(topo, n_vc=2, priority="apl")
+    arr = R.select_paths(at, K=4, local_search_rounds=2, engine="array")
+    sh = R.select_paths(at, K=4, local_search_rounds=2, engine="sharded")
+    return topo, at, arr, sh
+
+
+# ---------------------------------------------------------------------------
+# sharded engine equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_routes_every_pair_at_exact_distance(pod_routed):
+    topo, at, arr, sh = pod_routed
+    assert sh.unreachable == 0
+    assert isinstance(sh.table, CSRPathTable)
+    assert sh.table.n_routed() == topo.n * (topo.n - 1)
+    best = R.node_distances(at, np.arange(topo.n))
+    fs, fd = sh.table.flow_src, sh.table.dst
+    # every flow's length equals the exact BFS distance of the array
+    # engine (all candidates are shortest, the engines only pick)
+    assert (sh.table.flow_len == best[fs, fd]).all()
+    assert abs(sh.avg_hops - arr.avg_hops) < 1e-12
+
+
+def test_sharded_paths_are_valid_allowed_turn_walks(pod_routed):
+    topo, at, arr, sh = pod_routed
+    ch = at.channels
+    t = sh.table
+    src = t.flow_src
+    lens = t.flow_len.astype(np.int64)
+    first = t.chan[t.hop_indptr[:-1]]
+    last = t.chan[t.hop_indptr[1:] - 1]
+    assert (ch.src[first] == src).all()
+    assert (ch.dst[last] == t.dst).all()
+    # consecutive channels connect node-wise
+    m = np.ones(len(t.chan) - 1, bool)
+    m[t.hop_indptr[1:-1] - 1] = False
+    assert (ch.dst[t.chan[:-1][m]] == ch.src[t.chan[1:][m]]).all()
+    # and the (channel, vc) hops are allowed turns
+    assert V.verify_deadlock_free(at, t)
+    del lens
+
+
+def test_sharded_l_max_within_5pct_of_array(pod_routed):
+    topo, at, arr, sh = pod_routed
+    assert sh.l_max <= arr.l_max * 1.05, (sh.l_max, arr.l_max)
+    np.testing.assert_array_equal(sh.loads, sh.table.loads())
+
+
+def test_sharded_under_fault_matches_array_reachability(pod_routed):
+    topo, at, arr, _ = pod_routed
+    color = F.colors_in_use(topo)[0]
+    dead = F.dead_channels_for_color(at, color)
+    ref = R.select_paths(at, K=4, local_search_rounds=1,
+                         dead_channels=dead, engine="array")
+    sh = R.select_paths(at, K=4, local_search_rounds=1,
+                        dead_channels=dead, engine="sharded")
+    assert sh.unreachable == ref.unreachable
+    assert abs(sh.avg_hops - ref.avg_hops) < 1e-12
+    assert sh.l_max <= ref.l_max * 1.05
+    deadarr = np.fromiter(dead, np.int64, len(dead))
+    assert not np.isin(sh.table.chan, deadarr).any()
+    assert V.verify_deadlock_free(at, sh.table)
+
+
+def test_sharded_stats_surface_stage_split_and_counters(pod_routed):
+    _, _, arr, sh = pod_routed
+    for k in ("bfs_s", "walk_s", "greedy_s", "refine_s", "refine_pool",
+              "refine_moved", "k_full_flows"):
+        assert k in sh.stats
+    for k in ("enumerate_s", "greedy_s", "local_search_s", "hot_peel_s",
+              "hot_walk_s"):
+        assert k in arr.stats
+
+
+# ---------------------------------------------------------------------------
+# CSR PathTable round trip + consumers
+# ---------------------------------------------------------------------------
+
+
+def test_csr_dense_round_trip_bit_identity(pod_routed):
+    _, _, arr, sh = pod_routed
+    dense = sh.table.to_dense()
+    back = CSRPathTable.from_dense(dense)
+    for a, b in ((back.src_indptr, sh.table.src_indptr),
+                 (back.dst, sh.table.dst),
+                 (back.hop_indptr, sh.table.hop_indptr),
+                 (back.chan, sh.table.chan), (back.vc, sh.table.vc)):
+        np.testing.assert_array_equal(a, b)
+    d2 = back.to_dense()
+    np.testing.assert_array_equal(d2.path, dense.path)
+    np.testing.assert_array_equal(d2.vcs, dense.vcs)
+    np.testing.assert_array_equal(d2.hops, dense.hops)
+    # statistics parity with the dense layout
+    np.testing.assert_array_equal(sh.table.loads(), dense.loads())
+    assert sh.table.l_max() == dense.l_max()
+    assert abs(sh.table.avg_hops() - dense.avg_hops()) < 1e-12
+    assert (sh.table.vc_hop_counts() == dense.vc_hop_counts()).all()
+    np.testing.assert_array_equal(sh.table.routed_mask(),
+                                  dense.routed_mask())
+    np.testing.assert_array_equal(sh.table.hops, dense.hops)
+    assert sh.table.as_dicts() == dense.as_dicts()
+    # round trip of the array engine's dense table too
+    rt = CSRPathTable.from_dense(arr.table).to_dense()
+    np.testing.assert_array_equal(rt.path, arr.table.path)
+    np.testing.assert_array_equal(rt.vcs, arr.table.vcs)
+
+
+def test_build_tables_bit_identical_for_csr_and_dense(pod_routed):
+    topo, at, _, sh = pod_routed
+    t_csr = NS.build_tables(topo, sh.table)
+    t_dense = NS.build_tables(topo, sh.table.to_dense())
+    # the CSR SimTables densifies lazily on first array access
+    assert isinstance(t_csr.table, CSRPathTable)
+    np.testing.assert_array_equal(t_csr.path, t_dense.path)
+    np.testing.assert_array_equal(t_csr.vcs, t_dense.vcs)
+    np.testing.assert_array_equal(t_csr.hops, t_dense.hops)
+    assert isinstance(t_csr.table, PathTable)
+
+
+def test_csr_sim_runs_and_conserves_packets(pod_routed):
+    topo, at, _, sh = pod_routed
+    tab = NS.at_tables(topo, at, sh)
+    r = NS.run(tab, 0.02, cycles=600, warmup=200)
+    assert r["injected_total"] == r["consumed_total"] + r["in_flight"]
+    assert r["delivered"] > 0
+
+
+# ---------------------------------------------------------------------------
+# exact-lookahead VC allocation
+# ---------------------------------------------------------------------------
+
+
+def test_lookahead_vcalloc_identical_on_csr_and_dense(pod_routed):
+    topo, at, _, sh = pod_routed
+    dense = sh.table.to_dense()
+    csr = sh.table.copy()
+    s_dense: dict = {}
+    s_csr: dict = {}
+    c1 = V.allocate_vcs(at, dense, balance=True, stats=s_dense)
+    c2 = V.allocate_vcs(at, csr, balance=True, stats=s_csr)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_array_equal(csr.to_dense().vcs, dense.vcs)
+    assert s_dense["greedy_dead_ends"] == s_csr["greedy_dead_ends"]
+    assert V.verify_deadlock_free(at, csr)
+    assert V.verify_deadlock_free(at, dense)
+
+
+def test_lookahead_matches_reference_dfs_per_flow(pod_routed):
+    """The vectorised lookahead must return exactly the assignment the
+    reference per-flow DFS finds (first solution in priority order)."""
+    topo, at, _, sh = pod_routed
+    table = sh.table.copy()
+    counts = V.allocate_vcs(at, table, balance=False)
+    assert counts[0] > counts[1], "naive policy should bias VC0"
+    P, Vc, lens = table.block_paths(0, min(table.n_flows, 500))
+    for f in range(P.shape[0]):
+        path = [int(c) for c in P[f, :lens[f]]]
+        ref = V._assign_path(at, path, 0)
+        assert ref == [int(v) for v in Vc[f, :lens[f]]], f
+
+
+def test_fault_correlated_traffic_pattern():
+    from repro.core.traffic import TrafficPattern
+    topo = T.pt((4, 4, 4))
+    at = R.allowed_turns(topo, n_vc=2, priority="apl")
+    color = F.colors_in_use(topo)[0]
+    region = F.fault_region_nodes(at, color)
+    assert len(region) and len(region) < topo.n
+    tp = TrafficPattern.fault_correlated(topo.n, region, frac=0.6,
+                                         src_boost=2.0)
+    m = tp.matrix
+    assert (np.diag(m) == 0).all()
+    outside = np.setdiff1d(np.arange(topo.n), region)
+    src = int(outside[0])
+    # 60% of that source's demand lands inside the region
+    assert abs(m[src, region].sum() / m[src].sum() - 0.6) < 1e-9
+    # impaired sources inject at twice the baseline
+    assert np.allclose(tp.src_rate[region], 2.0)
+    assert np.allclose(tp.src_rate[outside], 1.0)
+    # compiles to alias tables and drives the simulator
+    dead = F.dead_channels_for_color(at, color)
+    routed = R.select_paths(at, K=4, local_search_rounds=1,
+                            dead_channels=dead, engine="sharded")
+    tab = NS.at_tables(topo, at, routed)
+    r = NS.run(tab, 0.02, cycles=400, warmup=100, traffic=tp)
+    assert r["injected_total"] == r["consumed_total"] + r["in_flight"]
+
+
+@pytest.mark.huge
+@pytest.mark.slow          # the fast lane's -m "not slow" overrides the
+def test_12cube_routes_end_to_end_sharded():        # "not huge" addopts
+    """12^3 smoke (opt-in via ``pytest -m huge``): the sharded engine
+    routes 1728 chips end-to-end into a CSR table, deadlock-free."""
+    topo = T.pt((12, 12, 12))
+    at = R.allowed_turns(topo, n_vc=2, priority="apl")
+    sh = R.select_paths(at, K=4, local_search_rounds=2, engine="sharded")
+    assert sh.unreachable == 0
+    assert sh.table.n_routed() == topo.n * (topo.n - 1)
+    tab = NS.at_tables(topo, at, sh)
+    assert V.verify_deadlock_free(at, tab.table)
