@@ -2,6 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV lines (plus human-readable detail).
 Quick settings by default; pass --full for the paper-scale sweeps.
+
+CI usage: ``python benchmarks/run.py --json --check`` runs every suite,
+writes the BENCH_*.json trackers, and exits non-zero when a regression
+guard trips (exit 1) or a suite raises (exit 2). Guards compare against
+the stored BENCH_*.json baselines and skip with a warning when those are
+absent (fresh checkout / fork), so a first CI run always passes the
+guard stage.
 """
 from __future__ import annotations
 
@@ -15,14 +22,14 @@ sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 sys.path.insert(0, str(Path(__file__).parent.parent))
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", action="store_true",
                     help="also write machine-readable BENCH_netsim.json "
                          "(netsim sweep wall-clock + per-pattern "
-                         "saturation points) and BENCH_routing.json "
+                         "saturation points), BENCH_routing.json "
                          "(routing-engine wall-clock at 64/256/512 chips "
                          "incl. the batched allowed-turns admission "
                          "breakdown, per-stage select splits for the "
@@ -30,18 +37,37 @@ def main() -> None:
                          "greedy-dead-end counters; with --full also the "
                          "1728-chip 12^3 and 4096-chip 16^3 end-to-end "
                          "entries routed by the sharded engine into the "
-                         "CSR PathTable; regressions >1.5x on the 8^3 "
-                         "allowed_turns_s or array_select_s vs the "
-                         "stored baseline print a WARNING line)")
+                         "CSR PathTable) and BENCH_synthesis.json "
+                         "(batched LP synthesis wall-clock, lambda vs "
+                         "the Basu bound, routed l_max + saturation of "
+                         "synthesized vs torus pods; --full adds the "
+                         "256-chip and 8^3 512-chip entries). Guarded "
+                         "timings are medians of 3 repeats; regressions "
+                         "past the per-guard bound vs the stored "
+                         "baseline print a WARNING line")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when any regression guard trips "
+                         "(exit 1) or a suite errors (exit 2) -- the CI "
+                         "regression-guard mode; guards skip cleanly "
+                         "when no BENCH_*.json baseline exists yet")
     args = ap.parse_args()
+    if args.check and not args.json:
+        # guards compare against (and refresh) the BENCH_*.json
+        # baselines; --check without them would silently check nothing
+        print("## --check implies --json (guards need the stored "
+              "baselines)")
+        args.json = True
 
-    from benchmarks import (bench_netsim, bench_routing, fig1_smallgraphs,
-                            fig2_progress, fig3_analytical, fig5_saturation,
+    from benchmarks import (bench_netsim, bench_routing, bench_synthesis,
+                            fig1_smallgraphs, fig2_progress,
+                            fig3_analytical, fig5_saturation,
                             fig6_collectives, fig7_traces, fig8_faults,
                             fig9_routing_ablation, roofline)
+    from benchmarks.common import REGRESSIONS
     root = Path(__file__).parent.parent
     netsim_json = root / "BENCH_netsim.json" if args.json else None
     routing_json = root / "BENCH_routing.json" if args.json else None
+    synthesis_json = root / "BENCH_synthesis.json" if args.json else None
     suites = [
         ("fig1_smallgraphs", fig1_smallgraphs.main),
         ("fig2_progress", fig2_progress.main),
@@ -57,7 +83,11 @@ def main() -> None:
         ("bench_routing",
          lambda full=False: bench_routing.main(full,
                                                json_path=routing_json)),
+        ("bench_synthesis",
+         lambda full=False: bench_synthesis.main(
+             full, json_path=synthesis_json)),
     ]
+    errors = []
     print("name,us_per_call,derived")
     for name, fn in suites:
         if args.only and args.only not in name:
@@ -69,8 +99,21 @@ def main() -> None:
         except Exception as e:
             print(f"{name},0,ERROR:{e}")
             traceback.print_exc()
+            errors.append(name)
         print(f"## {name} done in {time.time() - t0:.1f}s", flush=True)
+
+    if errors:
+        print(f"## suites with errors: {', '.join(errors)}")
+    if REGRESSIONS:
+        print(f"## regression guards tripped: "
+              f"{', '.join(g['name'] for g in REGRESSIONS)}")
+    if args.check:
+        if errors:
+            return 2
+        if REGRESSIONS:
+            return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -55,10 +55,15 @@ class LPResult:
 
 
 def solve_highs(c, A: COOMatrix, b, lo, hi,
-                method: str = "highs") -> LPResult:
+                method: str = "highs", **options) -> LPResult:
+    """HiGHS oracle. Extra ``options`` are forwarded to scipy's linprog
+    (e.g. ``ipm_optimality_tolerance=1e-4`` -- the synthesis fixing loop
+    only consumes the *ordering* of the fractional m values, so loose
+    IPM tolerances buy large-instance wall-clock at no quality cost)."""
     from scipy.optimize import linprog
     res = linprog(c, A_ub=A.to_scipy(), b_ub=b,
-                  bounds=np.stack([lo, hi], axis=1), method=method)
+                  bounds=np.stack([lo, hi], axis=1), method=method,
+                  options=options or None)
     y = None
     if res.status == 0 and hasattr(res, "ineqlin"):
         y = -np.asarray(res.ineqlin.marginals)

@@ -10,7 +10,6 @@ plus a perfect matching per OCS group.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -115,17 +114,36 @@ def ocs_groups(pod: Pod) -> Dict[int, List[Port]]:
     return groups
 
 
+def valid_optical_pairs_arrays(pod: Pod
+                               ) -> Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray]:
+    """All OCS-feasible optical edges as ``(u, v, color)`` arrays, u < v.
+
+    Vectorised per color: a port list is sorted by chip (one port per
+    (chip, axis), so chips are distinct within a group) and the upper
+    triangle of its chip array enumerates every circuit-connectable pair
+    -- identical output order to the old ``itertools.combinations`` loop.
+    """
+    us, vs, cs = [], [], []
+    for color, plist in ocs_groups(pod).items():
+        chips = np.array([p.chip for p in plist], np.int32)
+        if len(chips) < 2:
+            continue
+        iu, iv = np.triu_indices(len(chips), k=1)
+        us.append(chips[iu])
+        vs.append(chips[iv])
+        cs.append(np.full(len(iu), color, np.int32))
+    if not us:
+        z = np.zeros(0, np.int32)
+        return z, z, z
+    return np.concatenate(us), np.concatenate(vs), np.concatenate(cs)
+
+
 def valid_optical_pairs(pod: Pod) -> List[Tuple[int, int, int]]:
     """All OCS-feasible optical edges as (u, v, color), u < v chips.
     Any two distinct ports of the same OCS group may be circuit-connected."""
-    out = []
-    for color, plist in ocs_groups(pod).items():
-        for a, b in itertools.combinations(plist, 2):
-            if a.chip == b.chip:
-                continue
-            u, v = sorted((a.chip, b.chip))
-            out.append((u, v, color))
-    return out
+    u, v, c = valid_optical_pairs_arrays(pod)
+    return list(zip(u.tolist(), v.tolist(), c.tolist()))
 
 
 # ---------------------------------------------------------------------------

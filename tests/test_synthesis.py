@@ -1,0 +1,125 @@
+"""Batched synthesis engine: LP-builder bit-exactness vs the seed loops,
+small-pod known optima, and the end-to-end round trip into a
+deadlock-free routed pod."""
+import numpy as np
+import pytest
+
+from repro.core import synthesis as SY, topology as T
+
+
+def _canon(A):
+    import scipy.sparse as sp
+    M = sp.coo_matrix((A.vals, (A.rows, A.cols)), shape=A.shape).tocsr()
+    M.sum_duplicates()
+    return M
+
+
+@pytest.mark.parametrize("spec,kw", [
+    ((4, 4, 4), {}),
+    ((4, 4, 8), {}),
+    ((4, 4, 8), {"fault_f": 1}),
+    ((4, 4, 8), {"symmetric": False}),
+])
+def test_lp_builders_bit_identical(spec, kw):
+    """The ragged-CSR builder reproduces the seed's per-pair loops
+    exactly: same variable layout, same rows, same coalesced matrix."""
+    pod = T.Pod(spec)
+    ref = SY.build_synthesis_lp(pod, engine="reference", **kw)
+    bat = SY.build_synthesis_lp(pod, engine="batched", **kw)
+    assert ref.n_var == bat.n_var
+    assert ref.A.shape == bat.A.shape
+    assert np.array_equal(ref.c, bat.c)
+    assert np.array_equal(ref.b, bat.b)
+    assert np.array_equal(ref.lo, bat.lo)
+    assert np.array_equal(ref.hi, bat.hi)
+    diff = _canon(ref.A) - _canon(bat.A)
+    diff.eliminate_zeros()
+    assert diff.nnz == 0
+    assert ref.orbit_keys == bat.orbit_keys
+    assert ref.orbit_members == bat.orbit_members
+    assert ref.port_of == bat.port_of
+
+
+def test_lp_builder_pair_weight_matches():
+    def pw(a, b):
+        return (np.asarray(a) + np.asarray(b)) % 3 * 0.5
+
+    pod = T.Pod((4, 4, 4))
+    ref = SY.build_synthesis_lp(pod, engine="reference", pair_weight=pw)
+    bat = SY.build_synthesis_lp(pod, engine="batched", pair_weight=pw)
+    assert np.array_equal(ref.b, bat.b)
+    diff = _canon(ref.A) - _canon(bat.A)
+    diff.eliminate_zeros()
+    assert diff.nnz == 0
+
+
+def test_lp_builder_rejects_unknown_engine():
+    with pytest.raises(ValueError):
+        SY.build_synthesis_lp(T.Pod((4, 4, 4)), engine="nope")
+
+
+@pytest.fixture(scope="module")
+def small_synth():
+    return SY.synthesize((4, 4, 4), interval=48)
+
+
+def test_synthesize_small_pod_recovers_torus(small_synth):
+    """Single-cube pods admit exactly one perfect matching per OCS group
+    (two ports per color), so synthesis must recover the 4-torus wrap --
+    a known small-graph optimum -- and its LP lambda must equal the
+    exact torus MCF."""
+    from repro.core.mcf import mcf_topology
+    want = {(u, v) for u, v, _ in T.pt_optical(T.Pod((4, 4, 4)))}
+    got = {(u, v) for u, v, _ in small_synth.topology.optical}
+    assert got == want
+    assert small_synth.status == "ok"
+    assert small_synth.n_fixed == small_synth.n_orbits == 48
+    assert small_synth.n_completed == 0
+    lam = mcf_topology(small_synth.topology, prefer="highs")
+    lam_pt = mcf_topology(T.pt((4, 4, 4)), prefer="highs")
+    assert abs(lam - lam_pt) < 1e-6
+    assert abs(small_synth.lp_lambda - lam) < 1e-4
+
+
+def test_to_topology_roundtrip_deadlock_free(small_synth):
+    """to_topology() feeds the production pipeline: allowed_turns ->
+    select_paths(engine="sharded") -> VC alloc -> deadlock-free verify."""
+    topo = small_synth.to_topology()
+    assert topo is small_synth.topology
+    ee = SY.evaluate_end_to_end(topo, K=4, select_engine="sharded")
+    assert ee["deadlock_free"]
+    assert ee["unreachable"] == 0
+    assert ee["l_max"] >= ee["load_lower_bound"] > 0
+    assert ee["n_allowed_turns"] > 0
+
+
+def test_synthesize_directed_complete_graph():
+    """Known optimum from core/smallgraphs.py: with r = n-1 the only
+    degree-saturating topology is the complete digraph."""
+    from repro.core import smallgraphs as SG
+    n, r = 6, 5
+    edges, _ = SG.synthesize_directed(n, r, interval=5)
+    assert len(edges) == n * (n - 1)
+    complete = np.array([(a, b) for a in range(n)
+                         for b in range(n) if a != b], np.int32)
+    assert abs(SG.directed_mcf(edges, n) -
+               SG.directed_mcf(complete, n)) < 1e-8
+
+
+@pytest.mark.slow
+def test_synthesize_128_beats_torus_baselines():
+    """(4,4,8) synthesis quality: the integral MCF must clear the PT
+    torus (0.00781) by a wide margin; measured 0.01418 on this container
+    vs the paper's 0.01403 (TONS) / 0.01364 (PDTT)."""
+    from repro.core.mcf import mcf_uniform
+    res = SY.synthesize((4, 4, 8))
+    topo = res.topology
+    perms = T.cube_translations(topo.pod) if res.n_completed == 0 else None
+    lam, _ = mcf_uniform(topo.edges(), topo.n, perms=perms, prefer="highs")
+    assert lam > 0.012    # >1.5x PT; observed 0.01418
+    # matching completion guarantees a full radix-6 fabric
+    deg = np.zeros(topo.n, int)
+    for u, v in topo.edges():
+        deg[u] += 1
+        deg[v] += 1
+    assert (deg == 6).all()
