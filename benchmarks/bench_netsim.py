@@ -1,13 +1,26 @@
-"""Netsim perf tracking: batched sweep vs the seed's sequential sweep.
+"""Netsim perf tracking: batched sweep vs the seed's sequential sweep,
+plus the CSR-native kernel at the scales the dense layout cannot stage.
 
-Measures, on a 4x4x4 pod (one cube, 64 chips, PT wiring + DOR routing):
+Measures:
 
-- wall-clock of the *seed's* sequential `saturation_point` (its original
+- on a 4x4x4 pod (one cube, 64 chips, PT wiring + DOR routing):
+  wall-clock of the *seed's* sequential `saturation_point` (its original
   4-array kernel, vendored below as a frozen baseline; one jit call per
   rate with early exit) vs the current batched two-stage sweep, plus the
-  current kernel driven sequentially, and the speedups;
-- saturation points for the built-in traffic patterns (uniform,
-  transpose, hotspot, demand-derived), all through the same jitted kernel.
+  current kernel driven sequentially, and the speedups; saturation
+  points for the built-in traffic patterns (uniform, transpose, hotspot,
+  demand-derived), all through the same jitted CSR kernel;
+- on an 8^3 pod (512 chips): the guarded CSR section -- batched-sweep
+  wall-clock (median of 3, 1.5x guard), staged array bytes of the CSR vs
+  dense kernels (the CSR bytes carry a 1.15x guard: route tables are
+  deterministic, so the staged working set must not creep), saturation,
+  and process peak RSS;
+- with ``--full``, the 12^3 (1728-chip) entry: route via the sharded
+  engine, then the first saturation sweep at that scale -- dense
+  ``(n, n, MAXHOP)`` tables would need ~1.7 GB before the first cycle;
+  the CSR kernel stages O(total routed hops). The n1728 record is kept
+  across non-full runs (like bench_routing's full-scale rows), and
+  guards skip when the baseline is missing (fresh checkout / first run).
 
 ``--json`` (or ``main(json_path=...)``) writes BENCH_netsim.json so the
 perf trajectory is tracked from PR to PR.
@@ -23,9 +36,14 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent))
 
-from benchmarks.common import emit, load_bench_json
+from benchmarks.common import (emit, guard_regression, load_bench_json,
+                               median_timed, peak_rss_mb)
 
 SPEC = (4, 4, 4)
+GUARD_SPEC = (8, 8, 8)          # 512 chips: the guarded CSR section
+FULL_SPEC = (12, 12, 12)        # 1728 chips: --full saturation entry
+SWEEP_REGRESSION = 1.5          # 8^3 batched-sweep wall-clock guard
+BYTES_REGRESSION = 1.15         # 8^3 staged-array-bytes guard (deterministic)
 
 
 # ---------------------------------------------------------------------------
@@ -248,8 +266,87 @@ def main(full: bool = False, json_path=None) -> dict:
         "saturation_uniform_seed_kernel": round(sat_seed, 5),
         "saturation": {k: round(v, 5) for k, v in sats.items()},
     }
+    prior = load_bench_json(json_path) if json_path else {}
+
+    # ---- guarded 8^3 CSR section -------------------------------------
+    topo8 = T.pt(GUARD_SPEC)
+    tab8 = NS.dor_tables(topo8)
+    rates8 = [0.05, 0.1, 0.2, 0.4]
+    s_csr: dict = {}
+    s_dense: dict = {}
+    NS.sweep(tab8, rates8, cycles=1500, warmup=500, stats=s_csr)  # warm jit
+    _, t_sweep8 = median_timed(
+        lambda: NS.sweep(tab8, rates8, cycles=1500, warmup=500,
+                         stats=s_csr), repeats=3)
+    NS.sweep(tab8, rates8[:1], cycles=200, warmup=100, kernel="dense",
+             stats=s_dense)
+    sat8, _ = NS.saturation_point(tab8, step=0.02, cycles=1500,
+                                  warmup=500, stats=s_csr)
+    n512 = {
+        "pod": list(GUARD_SPEC),
+        "sweep_s": round(t_sweep8, 4),
+        "saturation_uniform": round(sat8, 5),
+        "csr_array_bytes": int(s_csr["array_bytes"]),
+        "dense_array_bytes": int(s_dense["array_bytes"]),
+        "bytes_ratio": round(s_dense["array_bytes"]
+                             / max(s_csr["array_bytes"], 1), 2),
+        "peak_rss_mb": peak_rss_mb(),
+    }
+    result["n512"] = n512
+    print(f"  n512: sweep({len(rates8)} rates)={t_sweep8:.2f}s "
+          f"sat={sat8:.4f} csr_bytes={n512['csr_array_bytes']:,} "
+          f"dense_bytes={n512['dense_array_bytes']:,} "
+          f"({n512['bytes_ratio']}x) rss={n512['peak_rss_mb']}MB")
+    emit("bench_netsim_n512_sweep", t_sweep8 * 1e6,
+         f"csr_bytes={n512['csr_array_bytes']}")
     if json_path:
-        prior = load_bench_json(json_path)
+        prior512 = prior.get("n512", {})
+        guard_regression("netsim_n512_sweep_s", n512["sweep_s"],
+                         prior512.get("sweep_s"), SWEEP_REGRESSION)
+        guard_regression("netsim_n512_csr_array_bytes",
+                         n512["csr_array_bytes"],
+                         prior512.get("csr_array_bytes"),
+                         BYTES_REGRESSION)
+
+    # ---- 12^3 saturation entry (--full; record kept across runs) -----
+    if full:
+        from repro.core import routing as R
+
+        topo12 = T.pt(FULL_SPEC)
+        s12: dict = {}
+        t0 = time.time()
+        at12 = R.allowed_turns(topo12, n_vc=2, priority="apl")
+        sel12 = R.select_paths(at12, K=4, local_search_rounds=1,
+                               engine="sharded")
+        tab12 = NS.at_tables(topo12, at12, sel12)
+        t_route12 = time.time() - t0
+        t0 = time.time()
+        sat12, trace12 = NS.saturation_point(
+            tab12, step=0.05, max_rate=0.5, cycles=1200, warmup=400,
+            stats=s12)
+        t_sat12 = time.time() - t0
+        assert all(r["injected_total"] == r["consumed_total"]
+                   + r["in_flight"] for r in trace12)
+        result["n1728"] = {
+            "pod": list(FULL_SPEC),
+            "route_s": round(t_route12, 3),
+            "sat_sweep_s": round(t_sat12, 3),
+            "saturation_uniform": round(sat12, 5),
+            "l_max": float(sel12.l_max),
+            "csr_array_bytes": int(s12["array_bytes"]),
+            "kernel": s12["kernel"],
+            "peak_rss_mb": peak_rss_mb(),
+        }
+        print(f"  n1728: route={t_route12:.1f}s sat_sweep={t_sat12:.1f}s "
+              f"sat={sat12:.4f} csr_bytes={s12['array_bytes']:,} "
+              f"rss={result['n1728']['peak_rss_mb']}MB")
+        emit("bench_netsim_n1728_sat", t_sat12 * 1e6, f"{sat12:.4f}")
+    elif prior.get("n1728"):
+        # keep the --full record around on quick runs (baseline may be
+        # missing on a fresh checkout -- guards and readers tolerate it)
+        result["n1728"] = prior["n1728"]
+
+    if json_path:
         if prior.get("sweep_speedup_vs_seed"):
             print(f"  prior sweep speedup: "
                   f"{prior['sweep_speedup_vs_seed']}x")

@@ -43,7 +43,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).parent.parent))
 
 from benchmarks.common import (emit, guard_regression, load_bench_json,
-                               median_timed)
+                               median_timed, peak_rss_mb)
 
 SPECS = [("n64", (4, 4, 4)), ("n256", (4, 8, 8)), ("n512", (8, 8, 8))]
 FULL_SPECS = [("n1728", (12, 12, 12)), ("n4096", (16, 16, 16))]
@@ -75,7 +75,7 @@ def _sharded_breakdown(routed) -> dict:
     return {k: s.get(k, 0) for k in
             ("bfs_s", "walk_s", "greedy_s", "refine_s", "greedy_l_max",
              "refine_pool", "refine_moved", "refine_iters", "k_full_flows",
-             "rounds", "k_min")}
+             "rounds", "k_min", "refine_cap", "uniq_flows", "uniq_s")}
 
 
 def _select_stages(routed) -> dict:
@@ -161,6 +161,12 @@ def main(full: bool = False, json_path=None) -> dict:
             "sharded_select_stages": sbd,
             "sharded_l_max": sh.l_max,
         })
+        # the l_max delta vs the stored baseline tracks the refinement
+        # levers (auto-scaled refine_cap, kcap=1 uniq lane) size by size
+        prior_lmax = prior.get("sizes", {}).get(name,
+                                                {}).get("sharded_l_max")
+        if prior_lmax:
+            row["sharded_l_max_delta"] = round(sh.l_max - prior_lmax, 1)
         if "array_l_max" not in row:
             row["avg_hops"] = round(sh.avg_hops, 4)
             row["unreachable"] = sh.unreachable
@@ -171,7 +177,8 @@ def main(full: bool = False, json_path=None) -> dict:
               f"(bfs={sbd['bfs_s']:.2f} walk={sbd['walk_s']:.2f} "
               f"greedy={sbd['greedy_s']:.2f} refine={sbd['refine_s']:.2f} "
               f"pool={sbd['refine_pool']} moved={sbd['refine_moved']} "
-              f"k_full={sbd['k_full_flows']})")
+              f"k_full={sbd['k_full_flows']} uniq={sbd['uniq_flows']} "
+              f"cap={sbd['refine_cap']})")
         if topo.n <= REF_CAP or (full and topo.n <= 512):
             ref, t_ref = median_timed(
                 lambda: R.select_paths(at, K=4, local_search_rounds=2,
@@ -220,6 +227,7 @@ def main(full: bool = False, json_path=None) -> dict:
             guard_regression(f"routing_n512_{key}",
                              result["sizes"]["n512"].get(key),
                              prior_512.get(key), bound)
+    result["peak_rss_mb"] = peak_rss_mb()
     if prior.get("sizes", {}).get("n64", {}).get("speedup"):
         print(f"  prior n64 speedup: {prior['sizes']['n64']['speedup']}x")
     if json_path:

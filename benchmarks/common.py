@@ -80,6 +80,19 @@ def guard_regression(name: str, now, baseline, bound: float = 1.5,
     return tripped
 
 
+def peak_rss_mb() -> float:
+    """Peak resident set size of this process in MB.
+
+    ``ru_maxrss`` is kilobytes on Linux and bytes on macOS; benchmark
+    JSON records this next to the staged-array byte counts so the sim
+    memory win is visible end to end (allocator slack included).
+    """
+    import resource
+    r = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return round(r / (1024 * 1024) if sys.platform == "darwin"
+                 else r / 1024, 1)
+
+
 def median_timed(fn, repeats: int = 3):
     """Run ``fn`` ``repeats`` times; return (first result, median seconds).
 

@@ -14,7 +14,7 @@ from benchmarks.common import emit, load_tons, timed
 
 
 def saturation(topo, mode: str, step=0.02, cycles=3000, warmup=1000,
-               seed=0, traffic=None):
+               seed=0, traffic=None, stats=None):
     from repro.core import netsim as NS, routing as R
     if mode == "dor":
         tab = NS.dor_tables(topo)          # 2 escape VCs (datelines)
@@ -25,7 +25,8 @@ def saturation(topo, mode: str, step=0.02, cycles=3000, warmup=1000,
         routed = R.select_paths(at, K=4, local_search_rounds=3, seed=seed)
         tab = NS.at_tables(topo, at, routed)
     sat, _ = NS.saturation_point(tab, step=step, cycles=cycles,
-                                 warmup=warmup, traffic=traffic)
+                                 warmup=warmup, traffic=traffic,
+                                 stats=stats)
     return sat
 
 
@@ -36,17 +37,23 @@ def main(full: bool = False) -> None:
     cyc = 2500 if not full else 6000
 
     results = {}
+    sstats: dict = {}
     pt = T.pt(spec)
-    results["PT+DOR"], us = timed(saturation, pt, "dor", step, cyc)
-    results["PT+AT"], _ = timed(saturation, pt, "at", step, cyc)
+    results["PT+DOR"], us = timed(saturation, pt, "dor", step, cyc,
+                                  stats=sstats)
+    results["PT+AT"], _ = timed(saturation, pt, "at", step, cyc,
+                                stats=sstats)
     pdtt = T.pdtt(spec)
-    results["PDTT+AT"], _ = timed(saturation, pdtt, "at", step, cyc)
+    results["PDTT+AT"], _ = timed(saturation, pdtt, "at", step, cyc,
+                                  stats=sstats)
     loaded = load_tons(128)
     if loaded:
         results["TONS+AT"], _ = timed(saturation, loaded[0], "at", step,
-                                      cyc)
+                                      cyc, stats=sstats)
     base = results["PT+DOR"]
     print("# saturation, normalized to PT+DOR (paper Fig. 5: TONS ~2x)")
+    print(f"#  kernel={sstats.get('kernel')} peak sim array bytes "
+          f"{sstats.get('array_bytes', 0):,}")
     for k, v in results.items():
         print(f"  {k:10s}: sat={v:.4f}  norm={v / base:.2f}x")
     if "TONS+AT" in results:

@@ -35,6 +35,7 @@ def main(full: bool = False) -> None:
         sim_colors = colors[:: max(1, len(colors) // 4)] if not full \
             else colors
         t_route = 0.0
+        sstats: dict = {}
         for color in colors:
             dead = F.dead_channels_for_color(at, color)
             t0 = time.time()
@@ -50,14 +51,15 @@ def main(full: bool = False) -> None:
                 # all-to-all over the surviving reachable pairs
                 traffic = C.a2a_traffic(routed)
                 sat, _ = NS.saturation_point(tab, step=0.05, cycles=2000,
-                                             warmup=800, traffic=traffic)
+                                             warmup=800, traffic=traffic,
+                                             stats=sstats)
                 # recovery traffic clustered on the impaired region
                 from repro.core.traffic import TrafficPattern
                 fc = TrafficPattern.fault_correlated(
                     topo.n, F.fault_region_nodes(at, color), frac=0.5)
                 sat_fc, _ = NS.saturation_point(tab, step=0.05,
                                                 cycles=2000, warmup=800,
-                                                traffic=fc)
+                                                traffic=fc, stats=sstats)
                 sims[color] = (sat, sat_fc)
         lmaxes = np.array(lmaxes)
         print(f"  {name}: faults={len(colors)} disconnected={disconnected}"
@@ -69,6 +71,8 @@ def main(full: bool = False) -> None:
                   f"uniform/fault-correlated): "
                   + " ".join(f"c{c}={u:.3f}/{fcv:.3f}"
                              for c, (u, fcv) in sims.items()))
+            print(f"        sim kernel={sstats.get('kernel')} peak array "
+                  f"bytes {sstats.get('array_bytes', 0):,}")
         emit(f"fig8_{name.lower()}", 0,
              f"worst_fault_frac={base.l_max / lmaxes.max():.3f}")
 

@@ -29,7 +29,11 @@ def main() -> int:
     ap.add_argument("--json", action="store_true",
                     help="also write machine-readable BENCH_netsim.json "
                          "(netsim sweep wall-clock + per-pattern "
-                         "saturation points), BENCH_routing.json "
+                         "saturation points, the guarded 8^3 CSR-kernel "
+                         "section with staged array bytes + peak RSS, "
+                         "and with --full the 12^3 n1728 saturation "
+                         "entry -- kept across quick runs, guards skip "
+                         "while it is missing), BENCH_routing.json "
                          "(routing-engine wall-clock at 64/256/512 chips "
                          "incl. the batched allowed-turns admission "
                          "breakdown, per-stage select splits for the "

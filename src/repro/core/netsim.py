@@ -5,15 +5,28 @@ packet-granularity wormhole approximation with per-(channel, VC) FIFOs,
 round-robin VC arbitration, one packet serviced per channel per cycle and
 one packet accepted per queue per cycle (crossbar constraint; losers
 stall and retry), static single-path routing tables and per-hop VC
-assignments from the AT pipeline, all held in a packed
-:class:`repro.core.pathtable.PathTable`.
+assignments from the AT pipeline.
 
-Traffic is pluggable (:class:`repro.core.traffic.TrafficPattern`):
-destinations are drawn from per-source alias tables compiled into the
-jitted kernel, so uniform-random, permutation, hotspot and demand-driven
-patterns all share one compiled simulator. Injection-rate sweeps run all
+The default kernel is *CSR-native* (``kernel="csr"``): packet words carry
+a routed-flow id, and next-channel/next-VC lookups gather from the
+``CSRPathTable``'s concatenated hop array via ``hop_indptr[flow] + hop``
+indexing. Peak simulator memory therefore scales with total routed hops
+(O(H), ~73 MB at 12^3) instead of the dense ``(n, n, MAXHOP)`` gather
+tables (O(n^2 * MAXHOP), ~480 MB at 12^3 and ~3.4 GB at 16^3, which also
+exceeds the dense packet word's 12-bit node fields). The legacy dense
+kernel survives as ``kernel="dense"``: it consumes the same flow-slot
+traffic tables and the same RNG stream, so its per-rate counters are
+bit-identical to the CSR kernel's -- the equivalence oracle exercised by
+``tests/test_netsim_csr.py``. Keep the two cycle bodies in lockstep.
+
+Traffic is pluggable (:class:`repro.core.traffic.TrafficPattern`): demand
+matrices compile onto the table's flow slots
+(:class:`repro.core.traffic.CompiledFlowTraffic`, O(F) alias tables), so
+uniform-random, permutation, hotspot and demand-driven patterns all share
+one compiled simulator. Demand on unrouted pairs is dropped at compile
+time (rows renormalise over routed flows). Injection-rate sweeps run all
 rates in one batched device execution (lane-flattened rather than
-``jax.vmap``-ed -- see :func:`_sweep`) instead of a Python loop of
+``jax.vmap``-ed -- see :func:`_sweep_csr`) instead of a Python loop of
 per-rate jit calls.
 
 Accounting: ``delivered`` is the measurement-window consumption rate (the
@@ -43,42 +56,57 @@ import jax.numpy as jnp
 from repro.core.pathtable import MAXHOP, CSRPathTable, PathTable
 from repro.core.routing import ATResult, Channels, RoutingResult
 from repro.core.topology import Topology
-from repro.core.traffic import CompiledTraffic, TrafficPattern
+from repro.core.traffic import (CompiledFlowTraffic, CompiledTraffic,
+                                TrafficPattern, compile_flow_traffic)
 
 
 @dataclasses.dataclass
 class SimTables:
     """Static routing tables for the simulator.
 
-    Accepts either path-table layout; the packed CSR form is kept as-is
-    (statistics, verification and table plumbing all work on it) and is
-    densified lazily on first access to ``path``/``vcs``/``hops`` -- the
-    dense gather arrays only exist once a simulation kernel actually
-    needs them, so a 16^3 route-and-verify pipeline never pays the
-    ``n^2 * MAXHOP`` allocation.
+    Accepts either path-table layout and keeps it as-is in ``table``;
+    the CSR form is what the default simulator kernel consumes directly,
+    so a 12^3/16^3 route-and-simulate pipeline never materialises the
+    ``n^2 * MAXHOP`` arrays. Conversions are cached on the side:
+    :meth:`csr` packs a dense table once, :meth:`dense` (and the
+    ``path``/``vcs``/``hops`` views, kept for the dense kernel and
+    API-edge consumers) densifies a CSR table once.
     """
     n: int
     n_ch: int
     n_vc: int
     ch_dst: np.ndarray                  # (C,)
     table: Union[PathTable, CSRPathTable]
+    _dense_cache: Optional[PathTable] = \
+        dataclasses.field(default=None, repr=False)
+    _csr_cache: Optional[CSRPathTable] = \
+        dataclasses.field(default=None, repr=False)
 
-    def _dense(self) -> PathTable:
+    def dense(self) -> PathTable:
+        if isinstance(self.table, PathTable):
+            return self.table
+        if self._dense_cache is None:
+            self._dense_cache = self.table.to_dense()
+        return self._dense_cache
+
+    def csr(self) -> CSRPathTable:
         if isinstance(self.table, CSRPathTable):
-            self.table = self.table.to_dense()
-        return self.table
+            return self.table
+        if self._csr_cache is None:
+            self._csr_cache = CSRPathTable.from_dense(self.table)
+        return self._csr_cache
 
     @property
     def path(self) -> np.ndarray:
-        return self._dense().path
+        return self.dense().path
 
     @property
     def vcs(self) -> np.ndarray:
-        return self._dense().vcs
+        return self.dense().vcs
 
     @property
     def hops(self) -> np.ndarray:
-        return self._dense().hops
+        return self.dense().hops
 
 
 def build_tables(topo: Topology,
@@ -101,21 +129,28 @@ def build_tables(topo: Topology,
 
 
 # ---------------------------------------------------------------------------
-# Jitted kernel: all injection rates batched as lane-flattened simulations
+# Jitted kernels: all injection rates batched as lane-flattened simulations
 # ---------------------------------------------------------------------------
 
 
-# Packet word layout: src[0:12] | dst[12:24] | hop[24:30] | tag[30]
-# (so n <= 4096 and MAXHOP <= 63; checked in `sweep`). Packing all packet
-# attributes into one int32 turns the four per-attribute scatter updates
-# of the seed kernel into a single scatter -- scatters serialise on CPU
-# and dominated the vmapped sweep's wall-clock.
+# Packet word layouts (one int32 per packet; packing all attributes into
+# one word turns the four per-attribute scatter updates of the seed
+# kernel into a single scatter -- scatters serialise on CPU and dominated
+# the vmapped sweep's wall-clock):
+#
+#   dense kernel:  src[0:12] | dst[12:24] | hop[24:30] | tag[30]
+#                  (n <= 4095 -- the dense kernel cannot pack 16^3)
+#   csr kernel:    flow[0:24] | hop[24:30] | tag[30]
+#                  (F <= 2^24 - 1; all-pairs 16^3 = 4096*4095 still fits)
+#
+# MAXHOP <= 63 for both; checked in `sweep`.
 _SRC_BITS = 12
 _DST_SHIFT = 12
 _HOP_SHIFT = 24
 _TAG_SHIFT = 30
 _FIELD_MASK = (1 << 12) - 1
 _HOP_MASK = (1 << 6) - 1
+_FLOW_MASK = (1 << 24) - 1
 
 
 def _pack(src, dst, hop, tag):
@@ -123,12 +158,18 @@ def _pack(src, dst, hop, tag):
             | (tag.astype(jnp.int32) << _TAG_SHIFT))
 
 
+def _pack_flow(flow, hop, tag):
+    return (flow | (hop << _HOP_SHIFT)
+            | (tag.astype(jnp.int32) << _TAG_SHIFT))
+
+
 @partial(jax.jit, static_argnames=("R", "n", "n_ch", "n_vc", "slots",
                                    "cycles", "warmup", "flits"))
-def _sweep(ch_dst, pv, prob, alias, src_rate, rates, key, *, R, n,
-           n_ch, n_vc, slots, cycles, warmup, flits):
+def _sweep_csr(ch_dst, pvf, hptr, lenm1, src_ptr, deg, fprob, falias,
+               src_rate, rates, key, *, R, n, n_ch, n_vc, slots, cycles,
+               warmup, flits):
     """R independent simulations (one per injection rate) in one compiled
-    execution.
+    execution, gathering routes from the CSR hop arrays.
 
     The batch is *lane-flattened* rather than ``jax.vmap``-ed: lane ``l``'s
     queue (c, v) lives at flat row ``l*NQ + c*n_vc + v``, so every update
@@ -137,10 +178,16 @@ def _sweep(ch_dst, pv, prob, alias, src_rate, rates, key, *, R, n,
     poorly that it ran slower than the sequential python loop. Because the
     flat queue id factors as ``fc * n_vc + v`` with ``fc = l*C + c``, the
     single-lane arbitration/rank formulas carry over verbatim.)
+
+    Route lookups are flow-native: a head word's next (channel, VC) is
+    ``pvf[hptr[flow] + hop + 1]`` and it consumes when ``hop`` reaches
+    ``lenm1[flow]`` -- no (n, n, MAXHOP) arrays anywhere. ``pvf`` packs
+    ``channel * n_vc + vc`` per hop (one gather serves both fields).
     """
     C = R * n_ch                    # flat channels across lanes
     NQ = C * n_vc                   # flat queues across lanes
     N = R * n                       # flat sources across lanes
+    H = pvf.shape[0]
 
     # queue state: per-(lane, channel, vc) ring buffers of packed words
     q = jnp.zeros((NQ, slots), jnp.int32)
@@ -149,7 +196,6 @@ def _sweep(ch_dst, pv, prob, alias, src_rate, rates, key, *, R, n,
     rr = jnp.zeros((C,), jnp.int32)
     busy = jnp.zeros((C,), jnp.int32)   # flit-serialisation countdown
 
-    arrive_node = jnp.tile(ch_dst, R)[jnp.arange(NQ) // n_vc]
     srcs = jnp.tile(jnp.arange(n), R)            # local node ids per lane
     lane_q = (jnp.arange(N) // n) * (n_ch * n_vc)
     thresh = (rates[:, None] * src_rate[None, :]).reshape(N)
@@ -160,14 +206,12 @@ def _sweep(ch_dst, pv, prob, alias, src_rate, rates, key, *, R, n,
 
         # ---- head packet per (lane, channel, vc) --------------------------
         hw = q[jnp.arange(NQ), head]
-        hs = hw & _FIELD_MASK
-        hd = (hw >> _DST_SHIFT) & _FIELD_MASK
+        hf = hw & _FLOW_MASK
         hh = (hw >> _HOP_SHIFT) & _HOP_MASK
         nonempty = size > 0
 
-        consume_q = nonempty & (arrive_node == hd)
-        # pv packs channel * n_vc + vc per hop: one gather for both
-        nxt = pv[hs, hd, hh + 1]
+        consume_q = nonempty & (hh == lenm1[hf])
+        nxt = pvf[jnp.minimum(hptr[hf] + hh + 1, H - 1)]
         lane_base = (jnp.arange(NQ) // (n_ch * n_vc)) * (n_ch * n_vc)
         tq = jnp.where(consume_q, -1, lane_base + nxt)
         fwd_ok = nonempty & ~consume_q & (size[jnp.clip(tq, 0, NQ - 1)]
@@ -210,25 +254,29 @@ def _sweep(ch_dst, pv, prob, alias, src_rate, rates, key, *, R, n,
         p_slot = (head[tgt] + size[tgt]) % slots
         push_word = w_word + (1 << _HOP_SHIFT)      # hop += 1, rest intact
 
-        # ---- injection: alias-sampled destination per source --------------
+        # ---- injection: alias-sampled routed flow per source --------------
         measure = i >= warmup
         key, k1, k2, k3 = jax.random.split(key, 4)
         want = jax.random.uniform(k1, (N,)) < thresh
-        j = jax.random.randint(k2, (N,), 0, n)
-        u = jax.random.uniform(k3, (N,))
-        dsts = jnp.where(u < prob[srcs, j], j, alias[srcs, j])
-        cv0 = pv[srcs, dsts, 0]
-        iq = lane_q + jnp.clip(cv0, 0, n_ch * n_vc - 1)
+        u1 = jax.random.uniform(k2, (N,))
+        dg = deg[srcs]
+        j = jnp.minimum((u1 * dg.astype(jnp.float32)).astype(jnp.int32),
+                        dg - 1)
+        f0 = src_ptr[srcs] + jnp.maximum(j, 0)
+        u2 = jax.random.uniform(k3, (N,))
+        fid = jnp.where(u2 < fprob[f0], f0, falias[f0])
+        cv0 = pvf[hptr[fid]]
+        iq = lane_q + cv0
         # queue iq was popped this cycle iff its channel's winner is iq
         i_pop = (w_pop[iq // n_vc]
                  & (win_q[iq // n_vc] == iq)).astype(jnp.int32)
         # at most one push lands in iq this cycle (crossbar constraint)
         i_push = (first[iq] < C).astype(jnp.int32)
         has_space = size[iq] - i_pop + i_push < slots
-        inj = want & has_space & (cv0 >= 0)
+        inj = want & has_space & (dg > 0)
         i_slot = (head[iq] + size[iq] + i_push) % slots
-        inj_word = _pack(srcs, dsts, jnp.zeros((N,), jnp.int32),
-                         measure & inj)
+        inj_word = _pack_flow(fid, jnp.zeros((N,), jnp.int32),
+                              measure & inj)
 
         # ---- one fused scatter for pushes + injections --------------------
         all_rows = jnp.concatenate([jnp.where(w_push, tgt, NQ),
@@ -267,41 +315,226 @@ def _sweep(ch_dst, pv, prob, alias, src_rate, rates, key, *, R, n,
             size.reshape(R, -1).sum(axis=1))
 
 
-def _compiled(traffic, n: int) -> CompiledTraffic:
-    if traffic is None:
-        traffic = TrafficPattern.uniform(n)
-    if isinstance(traffic, TrafficPattern):
-        return traffic.compiled()
-    return traffic
+@partial(jax.jit, static_argnames=("R", "n", "n_ch", "n_vc", "slots",
+                                   "cycles", "warmup", "flits"))
+def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
+                 src_rate, rates, key, *, R, n, n_ch, n_vc, slots, cycles,
+                 warmup, flits):
+    """Legacy dense-gather kernel: identical cycle body to
+    :func:`_sweep_csr` (same RNG stream, same flow-slot sampling, same
+    arbitration) except route lookups gather from the dense
+    ``(n, n, MAXHOP)`` composite table and packet words carry (src, dst)
+    node ids. Kept as the bit-identity oracle for the CSR kernel -- edit
+    the two cycle bodies in lockstep.
+    """
+    C = R * n_ch
+    NQ = C * n_vc
+    N = R * n
+
+    q = jnp.zeros((NQ, slots), jnp.int32)
+    head = jnp.zeros((NQ,), jnp.int32)
+    size = jnp.zeros((NQ,), jnp.int32)
+    rr = jnp.zeros((C,), jnp.int32)
+    busy = jnp.zeros((C,), jnp.int32)
+
+    arrive_node = jnp.tile(ch_dst, R)[jnp.arange(NQ) // n_vc]
+    srcs = jnp.tile(jnp.arange(n), R)
+    lane_q = (jnp.arange(N) // n) * (n_ch * n_vc)
+    thresh = (rates[:, None] * src_rate[None, :]).reshape(N)
+
+    def cycle(i, carry):
+        q, head, size, rr, busy, key, stats = carry
+        offered, accepted, tagged, consumed_meas, consumed, injected = stats
+
+        hw = q[jnp.arange(NQ), head]
+        hs = hw & _FIELD_MASK
+        hd = (hw >> _DST_SHIFT) & _FIELD_MASK
+        hh = (hw >> _HOP_SHIFT) & _HOP_MASK
+        nonempty = size > 0
+
+        consume_q = nonempty & (arrive_node == hd)
+        # pv packs channel * n_vc + vc per hop: one gather for both
+        nxt = pv[hs, hd, hh + 1]
+        lane_base = (jnp.arange(NQ) // (n_ch * n_vc)) * (n_ch * n_vc)
+        tq = jnp.where(consume_q, -1, lane_base + nxt)
+        fwd_ok = nonempty & ~consume_q & (size[jnp.clip(tq, 0, NQ - 1)]
+                                          < slots)
+        eligible = consume_q | fwd_ok
+
+        eligible = eligible & jnp.repeat(busy == 0, n_vc)
+        elig_cv = eligible.reshape(C, n_vc)
+        offs = (rr[:, None] + jnp.arange(n_vc)[None, :]) % n_vc
+        pri = jnp.take_along_axis(elig_cv, offs, axis=1)
+        first = jnp.argmax(pri, axis=1)
+        any_e = pri.any(axis=1)
+        win_v = (rr + first) % n_vc
+        win_q = jnp.arange(C) * n_vc + win_v
+        win_valid = any_e
+        rr = jnp.where(win_valid, (win_v + 1) % n_vc, rr)
+
+        w_word = hw[win_q]
+        w_tag = (w_word >> _TAG_SHIFT) & 1
+        w_consume = consume_q[win_q] & win_valid
+        w_target = jnp.where(win_valid & ~w_consume, tq[win_q], -1)
+
+        cand = win_valid & ~w_consume & (w_target >= 0)
+        tgt = jnp.clip(w_target, 0, NQ - 1)
+        first = jnp.full((NQ + 1,), C, jnp.int32) \
+            .at[jnp.where(cand, tgt, NQ)].min(jnp.arange(C, dtype=jnp.int32))
+        w_push = cand & (first[tgt] == jnp.arange(C))
+        w_pop = w_consume | w_push
+        busy = jnp.where(w_pop, flits - 1, jnp.maximum(busy - 1, 0))
+
+        p_slot = (head[tgt] + size[tgt]) % slots
+        push_word = w_word + (1 << _HOP_SHIFT)
+
+        measure = i >= warmup
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        want = jax.random.uniform(k1, (N,)) < thresh
+        u1 = jax.random.uniform(k2, (N,))
+        dg = deg[srcs]
+        j = jnp.minimum((u1 * dg.astype(jnp.float32)).astype(jnp.int32),
+                        dg - 1)
+        f0 = src_ptr[srcs] + jnp.maximum(j, 0)
+        u2 = jax.random.uniform(k3, (N,))
+        fid = jnp.where(u2 < fprob[f0], f0, falias[f0])
+        dsts = fdst[fid]
+        cv0 = pv[srcs, dsts, 0]
+        iq = lane_q + jnp.clip(cv0, 0, n_ch * n_vc - 1)
+        i_pop = (w_pop[iq // n_vc]
+                 & (win_q[iq // n_vc] == iq)).astype(jnp.int32)
+        i_push = (first[iq] < C).astype(jnp.int32)
+        has_space = size[iq] - i_pop + i_push < slots
+        inj = want & has_space & (dg > 0)
+        i_slot = (head[iq] + size[iq] + i_push) % slots
+        inj_word = _pack(srcs, dsts, jnp.zeros((N,), jnp.int32),
+                         measure & inj)
+
+        all_rows = jnp.concatenate([jnp.where(w_push, tgt, NQ),
+                                    jnp.where(inj, iq, NQ)])
+        all_slots = jnp.concatenate([p_slot, i_slot])
+        all_words = jnp.concatenate([push_word, inj_word])
+        q = q.at[all_rows, all_slots].set(all_words, mode="drop")
+
+        popq = jnp.where(w_pop, win_q, NQ)
+        d_rows = jnp.concatenate([popq, all_rows])
+        d_vals = jnp.concatenate([jnp.full((C,), -1, jnp.int32),
+                                  jnp.ones((C + N,), jnp.int32)])
+        size = size.at[d_rows].add(d_vals, mode="drop")
+        head = head.at[popq].add(1, mode="drop") % slots
+
+        meas = jnp.where(measure, 1, 0)
+        cons_lane = w_consume.reshape(R, n_ch).sum(axis=1)
+        offered = offered + meas * want.reshape(R, n).sum(axis=1)
+        accepted = accepted + meas * inj.reshape(R, n).sum(axis=1)
+        tagged = tagged + (w_consume & (w_tag == 1)).reshape(
+            R, n_ch).sum(axis=1)
+        consumed_meas = consumed_meas + meas * cons_lane
+        consumed = consumed + cons_lane
+        injected = injected + inj.reshape(R, n).sum(axis=1)
+        return (q, head, size, rr, busy, key,
+                (offered, accepted, tagged, consumed_meas, consumed,
+                 injected))
+
+    stats0 = (jnp.zeros((R,), jnp.int32),) * 6
+    carry = (q, head, size, rr, busy, key, stats0)
+    carry = jax.lax.fori_loop(0, cycles, cycle, carry)
+    size = carry[2]
+    offered, accepted, tagged, consumed_meas, consumed, injected = carry[-1]
+    return (offered, accepted, tagged, consumed_meas, consumed, injected,
+            size.reshape(R, -1).sum(axis=1))
+
+
+def _compiled_flows(traffic, tables: SimTables) -> CompiledFlowTraffic:
+    """Compile any accepted traffic input onto the table's flow slots."""
+    if isinstance(traffic, CompiledFlowTraffic):
+        return traffic
+    t = tables.csr()
+    ct = compile_flow_traffic(traffic, t.src_indptr, t.dst)
+    if len(ct.prob) != t.n_flows:
+        raise ValueError("flow traffic does not match the path table")
+    return ct
 
 
 def sweep(tables: SimTables, rates: Sequence[float],
-          traffic: Optional[Union[TrafficPattern, CompiledTraffic]] = None,
+          traffic: Optional[Union[TrafficPattern, CompiledTraffic,
+                                  CompiledFlowTraffic]] = None,
           cycles: int = 6000, warmup: int = 2000, slots: int = 128,
-          seed: int = 0, flits: int = 4) -> List[Dict]:
+          seed: int = 0, flits: int = 4, kernel: str = "csr",
+          stats: Optional[dict] = None) -> List[Dict]:
     """Simulate every rate in one batched (lane-flattened) kernel
-    execution; one dict per rate."""
-    if tables.n > _FIELD_MASK:
-        raise ValueError(f"packed packet words support n <= {_FIELD_MASK}")
+    execution; one dict per rate.
+
+    ``kernel="csr"`` (default) gathers routes from the CSR hop arrays
+    and never touches the dense ``(n, n, MAXHOP)`` tables;
+    ``kernel="dense"`` runs the legacy dense-gather kernel on the same
+    flow-slot traffic tables and RNG stream -- the counters of the two
+    kernels are bit-identical (the CSR parity tests rely on it). A
+    ``stats`` dict, when given, records the kernel used and the peak
+    device-array bytes staged per call under ``"array_bytes"``.
+    """
     if MAXHOP > _HOP_MASK:
         raise ValueError(f"packed packet words support MAXHOP <= "
                          f"{_HOP_MASK}")
-    ct = _compiled(traffic, tables.n)
+    ct = _compiled_flows(traffic, tables)
     rates = np.asarray(list(rates), np.float32)
-    # composite per-hop (channel * n_vc + vc) table: one kernel gather
-    pv = np.where(tables.path < 0, -1,
-                  tables.path * tables.n_vc
-                  + tables.vcs.astype(np.int32)).astype(np.int32)
+    R = len(rates)
+    NQ = R * tables.n_ch * tables.n_vc
+    F = len(ct.prob)
+    state_bytes = NQ * slots * 4 + NQ * 8 + R * tables.n_ch * 8
+    traffic_bytes = (ct.src_indptr.nbytes + ct.deg.nbytes + ct.prob.nbytes
+                     + ct.alias.nbytes + ct.src_rate.nbytes)
+    if F == 0:
+        if stats is not None:
+            stats["kernel"] = kernel
+            stats["array_bytes"] = max(stats.get("array_bytes", 0),
+                                       state_bytes + traffic_bytes)
+        return [{"rate": float(r), "offered": 0.0, "accepted": 0.0,
+                 "delivered": 0.0, "delivered_tagged": 0.0,
+                 "consumed_total": 0, "injected_total": 0, "in_flight": 0}
+                for r in rates]
+    if kernel == "csr":
+        t = tables.csr()
+        if t.n_flows > _FLOW_MASK:
+            raise ValueError(f"packed packet words support F <= "
+                             f"{_FLOW_MASK} flows")
+        pvf = (t.chan.astype(np.int64) * tables.n_vc
+               + t.vc.astype(np.int64)).astype(np.int32)
+        hptr = t.hop_indptr[:-1].astype(np.int32)
+        lenm1 = (np.diff(t.hop_indptr) - 1).astype(np.int32)
+        route_bytes = pvf.nbytes + hptr.nbytes + lenm1.nbytes
+        args = (jnp.asarray(tables.ch_dst), jnp.asarray(pvf),
+                jnp.asarray(hptr), jnp.asarray(lenm1))
+        fn = _sweep_csr
+    elif kernel == "dense":
+        if tables.n > _FIELD_MASK:
+            raise ValueError(f"the dense kernel's packed packet words "
+                             f"support n <= {_FIELD_MASK}")
+        # composite per-hop (channel * n_vc + vc) table: one kernel gather
+        pv = np.where(tables.path < 0, -1,
+                      tables.path * tables.n_vc
+                      + tables.vcs.astype(np.int32)).astype(np.int32)
+        fdst = np.asarray(tables.csr().dst, np.int32)
+        route_bytes = pv.nbytes + fdst.nbytes
+        args = (jnp.asarray(tables.ch_dst), jnp.asarray(pv),
+                jnp.asarray(fdst))
+        fn = _sweep_dense
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}")
+    if stats is not None:
+        stats["kernel"] = kernel
+        stats["array_bytes"] = max(stats.get("array_bytes", 0),
+                                   state_bytes + traffic_bytes
+                                   + route_bytes)
     # the simulator's integer carries are written for 32-bit mode; shield
     # it from processes that enabled x64 (e.g. the LP solver)
     with jax.experimental.disable_x64():
-        out = _sweep(
-            jnp.asarray(tables.ch_dst), jnp.asarray(pv),
-            jnp.asarray(ct.prob), jnp.asarray(ct.alias),
-            jnp.asarray(ct.src_rate),
-            jnp.asarray(rates), jax.random.PRNGKey(seed), R=len(rates),
-            n=tables.n, n_ch=tables.n_ch, n_vc=tables.n_vc, slots=slots,
-            cycles=cycles, warmup=warmup, flits=flits)
+        out = fn(*args, jnp.asarray(ct.src_indptr[:-1]),
+                 jnp.asarray(ct.deg), jnp.asarray(ct.prob),
+                 jnp.asarray(ct.alias), jnp.asarray(ct.src_rate),
+                 jnp.asarray(rates), jax.random.PRNGKey(seed), R=R,
+                 n=tables.n, n_ch=tables.n_ch, n_vc=tables.n_vc,
+                 slots=slots, cycles=cycles, warmup=warmup, flits=flits)
     off, acc, tagd, consm, cons, injd, infl = (np.asarray(a) for a in out)
     meas = cycles - warmup
     trace = []
@@ -322,12 +555,15 @@ def sweep(tables: SimTables, rates: Sequence[float],
 
 
 def run(tables: SimTables, rate: float,
-        traffic: Optional[Union[TrafficPattern, CompiledTraffic]] = None,
+        traffic: Optional[Union[TrafficPattern, CompiledTraffic,
+                                CompiledFlowTraffic]] = None,
         cycles: int = 6000, warmup: int = 2000, slots: int = 128,
-        seed: int = 0, flits: int = 4) -> Dict:
+        seed: int = 0, flits: int = 4, kernel: str = "csr",
+        stats: Optional[dict] = None) -> Dict:
     """Single-rate convenience wrapper over :func:`sweep`."""
     return sweep(tables, [rate], traffic, cycles=cycles, warmup=warmup,
-                 slots=slots, seed=seed, flits=flits)[0]
+                 slots=slots, seed=seed, flits=flits, kernel=kernel,
+                 stats=stats)[0]
 
 
 def saturation_point(tables: SimTables, step: float = 0.01,
@@ -335,8 +571,11 @@ def saturation_point(tables: SimTables, step: float = 0.01,
                      cycles: int = 6000, warmup: int = 2000,
                      slots: int = 128, flits: int = 4,
                      traffic: Optional[Union[TrafficPattern,
-                                             CompiledTraffic]] = None,
-                     seed: int = 0) -> Tuple[float, List[Dict]]:
+                                             CompiledTraffic,
+                                             CompiledFlowTraffic]] = None,
+                     seed: int = 0, kernel: str = "csr",
+                     stats: Optional[dict] = None) -> Tuple[float,
+                                                            List[Dict]]:
     """Saturation = last rate whose delivered throughput covers
     (1 - deficit) of offered, before the first shortfall.
 
@@ -347,8 +586,11 @@ def saturation_point(tables: SimTables, step: float = 0.01,
     rate-count) + one device execution; only full-fidelity rates enter the
     returned trace. A bracketing error costs at most one grid step of
     saturation accuracy -- within the deficit criterion's own noise.
+
+    The traffic pattern is compiled onto the table's flow slots once and
+    shared by every stage; ``kernel``/``stats`` forward to :func:`sweep`.
     """
-    ct = _compiled(traffic, tables.n)
+    ct = _compiled_flows(traffic, tables)
     rates = np.arange(step, max_rate + 1e-9, step)
     stride = max(1, int(round(np.sqrt(len(rates)))))
     coarse_idx = list(range(stride - 1, len(rates), stride))
@@ -356,7 +598,8 @@ def saturation_point(tables: SimTables, step: float = 0.01,
         coarse_idx.append(len(rates) - 1)
     coarse = sweep(tables, rates[coarse_idx], ct,
                    cycles=max(cycles // 2, warmup // 2 + 1),
-                   warmup=warmup // 2, slots=slots, seed=seed, flits=flits)
+                   warmup=warmup // 2, slots=slots, seed=seed, flits=flits,
+                   kernel=kernel, stats=stats)
 
     def ok(r):
         return r["delivered"] >= (1 - deficit) * r["offered"]
@@ -374,7 +617,8 @@ def saturation_point(tables: SimTables, step: float = 0.01,
     trace: List[Dict] = []
     while True:
         fine = sweep(tables, rates[lo:hi], ct, cycles=cycles,
-                     warmup=warmup, slots=slots, seed=seed, flits=flits)
+                     warmup=warmup, slots=slots, seed=seed, flits=flits,
+                     kernel=kernel, stats=stats)
         trace = fine + trace
         if lo == 0 or (fine and ok(fine[0])):
             break
@@ -461,7 +705,8 @@ def at_tables(topo: Topology, at: ATResult, routed: RoutingResult,
     Works on a copy of ``routed.table`` so the caller's RoutingResult is
     not mutated and the returned SimTables cannot be rewritten by later
     allocations on the same result. Both table layouts pass through
-    unchanged (a CSR table stays CSR).
+    unchanged (a CSR table stays CSR -- and feeds the CSR-native kernel
+    without ever densifying).
 
     ``balance=None`` skips re-allocation and keeps the VC assignment
     already in the table -- the array and sharded path-selection engines

@@ -90,6 +90,11 @@ class PathTable:
     def n_routed(self) -> int:
         return int(self.routed_mask().sum())
 
+    def nbytes(self) -> int:
+        """Bytes held by the dense ``(n, n, MAXHOP)`` route arrays --
+        the quantity the CSR layout's O(total routed hops) replaces."""
+        return int(self.path.nbytes + self.vcs.nbytes + self.hops.nbytes)
+
     def loads(self) -> np.ndarray:
         """Per-channel load: number of routes crossing each channel."""
         used = self.path[self.path >= 0]
@@ -272,6 +277,12 @@ class CSRPathTable:
 
     def n_routed(self) -> int:
         return self.n_flows
+
+    def nbytes(self) -> int:
+        """Bytes held by the packed CSR arrays (O(total routed hops))."""
+        return int(self.src_indptr.nbytes + self.dst.nbytes
+                   + self.hop_indptr.nbytes + self.chan.nbytes
+                   + self.vc.nbytes)
 
     def loads(self) -> np.ndarray:
         return np.bincount(self.chan,

@@ -1270,10 +1270,79 @@ class CandidateSet:
     unreachable: int
 
 
+def _unique_channel_flows(sg: StateGraph, dist: np.ndarray,
+                          best: np.ndarray, n: int) -> np.ndarray:
+    """(B, n) bool: flows whose BFS distance field admits a *single
+    shortest channel path* (every shortest state path projects onto the
+    same channel sequence, whatever its VC labeling). Such flows get a
+    one-walker budget and skip the mixed-radix slot machinery in
+    :func:`_walk_flows` (the ``kcap=1`` fast lane): all their candidates
+    would use the same channels, so the min-max greedy could never
+    distinguish them anyway -- and ties break to slot 0, the slot the
+    single walker produces.
+
+    Forward DP over the BFS levels: each state carries a flag ("all
+    shortest state paths to me share one channel projection") plus the
+    64-bit polynomial hash of that canonical projection; a state stays
+    unique iff every valid parent is unique with the *same* projection
+    hash. A flow is unique iff its arrival states at the best distance
+    all agree likewise. (Hash collisions could flag a two-path flow as
+    unique -- same 2^-64 risk the walk's dedup hash already accepts; the
+    consequence is a valid-but-unoptimised path choice, never an invalid
+    route.) Costs one sort of the reached states plus one ``rev_pad``
+    gather per level -- the same access pattern as a single extra
+    walker, amortised over the whole shard.
+    """
+    B, S = dist.shape
+    mul = np.uint64(0x9E3779B97F4A7C15)
+    st_chan = (np.arange(S, dtype=np.uint64) // np.uint64(sg.n_vc)
+               + np.uint64(1))
+    ucp = np.zeros((B, S), np.uint8)       # 0 unreached, 1 unique, 2 multi
+    hproj = np.zeros((B, S), np.uint64)
+    m1 = dist == 1
+    ucp[m1] = 1
+    hproj[m1] = np.broadcast_to(st_chan, (B, S))[m1]
+    bb, vv = np.nonzero(dist >= 2)
+    if len(bb):
+        lv = dist[bb, vv].astype(np.int64)
+        order = np.argsort(lv, kind="stable")
+        bb, vv, lv = bb[order], vv[order], lv[order]
+        lmax = int(lv[-1])
+        starts = np.searchsorted(lv, np.arange(2, lmax + 2))
+        for l in range(2, lmax + 1):
+            a, b = starts[l - 2], starts[l - 1]
+            if a == b:
+                continue
+            rb, rv = bb[a:b], vv[a:b]
+            par = sg.rev_pad[rv].astype(np.int64)
+            pc = np.clip(par, 0, S - 1)
+            okp = (par >= 0) & (dist[rb[:, None], pc] == l - 1)
+            pu = ucp[rb[:, None], pc]
+            ph = hproj[rb[:, None], pc]
+            ref = ph[np.arange(len(rv)), okp.argmax(axis=1)]
+            u = (((pu == 1) | ~okp).all(axis=1)
+                 & (np.where(okp, ph, ref[:, None])
+                    == ref[:, None]).all(axis=1))
+            ucp[rb, rv] = np.where(u, 1, 2).astype(np.uint8)
+            hproj[rb, rv] = np.where(u, ref * mul + st_chan[rv], 0)
+    # flow level: all arrival states unique with one shared projection
+    tgt = best[:, sg.dst_node]
+    ab, st = np.nonzero((dist == tgt) & (dist > 0))
+    nd = sg.dst_node[st]
+    bad = np.zeros((B, n), np.int64)
+    np.add.at(bad, (ab, nd), (ucp[ab, st] != 1).astype(np.int64))
+    hmin = np.full((B, n), np.iinfo(np.uint64).max, np.uint64)
+    hmax = np.zeros((B, n), np.uint64)
+    np.minimum.at(hmin, (ab, nd), hproj[ab, st])
+    np.maximum.at(hmax, (ab, nd), hproj[ab, st])
+    return (bad == 0) & (hmin == hmax)
+
+
 def _walk_flows(sg: StateGraph, n: int, n_vc: int, SEN: int,
                 dist: np.ndarray, best: np.ndarray, src_ids: np.ndarray,
                 fb: np.ndarray, fd: np.ndarray, flen: np.ndarray,
-                kcap: np.ndarray, K: int
+                kcap: np.ndarray, K: int,
+                uniq: Optional[np.ndarray] = None
                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Vectorised backward parent walk for the flows ``(fb, fd)`` of one
     source chunk (``dist``/``best`` rows indexed by ``fb``; ``src_ids``
@@ -1285,6 +1354,18 @@ def _walk_flows(sg: StateGraph, n: int, n_vc: int, SEN: int,
     slot range, it never changes a walker's hash rotation or code), so
     re-walking a flow with a larger budget reproduces its earlier slots
     -- the property the streaming engine's refinement sweep relies on.
+
+    ``uniq`` (optional per-flow bool, from
+    :func:`_unique_channel_flows`) marks flows whose shortest state
+    paths all share one channel projection: their single walker takes
+    the first valid parent at every level directly (an ``argmax`` over
+    the parent mask) and skips the hash-rotation / mixed-radix code
+    arithmetic entirely. Every candidate such a flow could enumerate
+    uses the same channels, so its load contribution -- the only thing
+    the greedy and refinement stages compare -- is independent of which
+    VC labeling the walker lands on. The uniq lane is deterministic
+    (same start state, first-parent rule), so re-walking a uniq flow in
+    the refinement sweep reproduces its round-loop candidate exactly.
 
     K walkers per flow, round-robin over end states; each walker's
     mixed-radix code picks parents so distinct codes -> distinct paths.
@@ -1330,20 +1411,32 @@ def _walk_flows(sg: StateGraph, n: int, n_vc: int, SEN: int,
     vc_buf = np.zeros((Wr, Lmax), np.int8)
     chan_buf[np.arange(Wr), wlen - 1] = cur // n_vc
     vc_buf[np.arange(Wr), wlen - 1] = (cur % n_vc).astype(np.int8)
+    wuniq = uniq[wflow] if uniq is not None else None
     for lvl in range(Lmax, 1, -1):
         act = np.nonzero(wlen >= lvl)[0]
         par = sg.rev_pad[cur[act]].astype(np.int64)      # (A, D)
         ok = (par >= 0) & (dist[wrow[act][:, None],
                                 np.clip(par, 0, S - 1)] == lvl - 1)
-        npar = ok.sum(axis=1)                            # >= 1 (BFS)
-        rot = ((whash[act] + cur[act].astype(np.uint64)
-                * np.uint64(0x9E3779B9)
-                + np.uint64(lvl) * np.uint64(0xC2B2AE35))
-               % npar.astype(np.uint64)).astype(np.int64)
-        pick = (code[act] + rot) % npar
-        code[act] //= npar
-        sel = ok & (np.cumsum(ok, axis=1) == (pick + 1)[:, None])
-        cur[act] = par[np.arange(len(act)), sel.argmax(axis=1)]
+        if wuniq is not None and wuniq[act].any():
+            ua = wuniq[act]
+            au = np.nonzero(ua)[0]
+            # unique flows: the only valid parent, no slot arithmetic
+            cur[act[au]] = par[au, ok[au].argmax(axis=1)]
+            ga = np.nonzero(~ua)[0]
+        else:
+            ga = np.arange(len(act))
+        if len(ga):
+            ag = act[ga]
+            okg = ok[ga]
+            npar = okg.sum(axis=1)                       # >= 1 (BFS)
+            rot = ((whash[ag] + cur[ag].astype(np.uint64)
+                    * np.uint64(0x9E3779B9)
+                    + np.uint64(lvl) * np.uint64(0xC2B2AE35))
+                   % npar.astype(np.uint64)).astype(np.int64)
+            pick = (code[ag] + rot) % npar
+            code[ag] //= npar
+            sel = okg & (np.cumsum(okg, axis=1) == (pick + 1)[:, None])
+            cur[ag] = par[ga, sel.argmax(axis=1)]
         chan_buf[act, lvl - 2] = (cur[act] // n_vc).astype(np.int32)
         vc_buf[act, lvl - 2] = (cur[act] % n_vc).astype(np.int8)
     # dedupe within each flow's slots (64-bit polynomial path hash;
@@ -1450,7 +1543,7 @@ def select_paths(at: ATResult, K: int = 8, seed: int = 0,
                  engine: str = "array", block: Optional[int] = None,
                  shard_sources: int = 64, rounds: int = 4,
                  k_min: Optional[int] = None,
-                 refine_cap: int = 300_000) -> RoutingResult:
+                 refine_cap: Optional[int] = None) -> RoutingResult:
     """Min-max channel load selection: greedy + local search (the paper
     solves an ILP with Gurobi; we report the achieved L_max against the
     lower bound so the optimality gap is visible).
@@ -1469,8 +1562,10 @@ def select_paths(at: ATResult, K: int = 8, seed: int = 0,
     time through a fused candidate-walk -> damped greedy pass coordinated
     by a persistent global load vector, with adaptive per-flow walker
     budgets (``k_min`` for cold flows, full ``K`` for flows touching the
-    running hot set) and a bounded cross-shard refinement sweep over the
-    hottest channels. It emits a packed
+    running hot set, a single machinery-free walker for flows with a
+    unique shortest path) and a bounded cross-shard refinement sweep
+    over the hottest channels (``refine_cap=None`` scales the pool with
+    the flow count: ``max(300_000, F // 24)``). It emits a packed
     :class:`~repro.core.pathtable.CSRPathTable` (memory scales with total
     hops, not ``n^2 * MAXHOP``), which the rest of the pipeline consumes
     directly.
@@ -1687,7 +1782,7 @@ def _select_sharded(at: ATResult, K: int = 8, seed: int = 0,
                     local_search_rounds: int = 3, block: int = 512,
                     shard_sources: int = 64, rounds: int = 4,
                     k_min: Optional[int] = None,
-                    refine_cap: int = 300_000, damp: float = 1.0,
+                    refine_cap: Optional[int] = None, damp: float = 1.0,
                     hot_load_frac: float = 0.97,
                     refine_iters: int = 2,
                     refine_block: int = 192) -> RoutingResult:
@@ -1714,12 +1809,16 @@ def _select_sharded(at: ATResult, K: int = 8, seed: int = 0,
       slices from herding onto currently-cold channels.
     - **Adaptive walker budgets**: flows touching the running hot set
       (endpoints of near-``l_max`` channels) walk the full ``K``
-      candidates; short or uncontested flows walk ``k_min``. Budgeted
-      slots are bit-identical to the full walk's slots, so the
-      refinement sweep can re-walk any flow at full ``K`` and recover
-      its current choice exactly.
+      candidates; short or uncontested flows walk ``k_min``, and flows
+      whose BFS field admits a *single shortest channel path*
+      (:func:`_unique_channel_flows`) walk exactly one candidate with
+      the slot machinery skipped. Budgeted slots are bit-identical to
+      the full walk's slots, so the refinement sweep can re-walk any
+      flow at full ``K`` and recover its current choice exactly.
     - **Cross-shard refinement**: a bounded sweep over the hottest
-      channels -- flows crossing them (capped by ``refine_cap``) are
+      channels -- flows crossing them (capped by ``refine_cap``;
+      ``None`` auto-scales to ``max(300_000, F // 24)`` so the pool
+      stays ~4% of the flows at 16^3 instead of a fixed 1.2%) are
       re-walked at full ``K`` and re-optimised with the array engine's
       exact own-load-removal local search, safe hot-set peel and
       sequential hot-channel walk, all snapshot-guarded so ``l_max``
@@ -1748,9 +1847,12 @@ def _select_sharded(at: ATResult, K: int = 8, seed: int = 0,
     shard_fb: List[np.ndarray] = []
     shard_fd: List[np.ndarray] = []
     shard_flen: List[np.ndarray] = []
+    shard_uniq: List[np.ndarray] = []
     gid0 = np.zeros(n_shards + 1, np.int64)
     src_flow_counts = np.zeros(n, np.int64)
     unreachable = 0
+    uniq_flows = 0
+    t_nsp = 0.0
     for si in range(n_shards):
         s0 = si * shard_sources
         srcs = np.arange(s0, min(s0 + shard_sources, n))
@@ -1762,14 +1864,24 @@ def _select_sharded(at: ATResult, K: int = 8, seed: int = 0,
         if len(flen) and int(flen.max()) > MAXHOP:
             raise ValueError(f"shortest path of {int(flen.max())} hops "
                              f"exceeds MAXHOP={MAXHOP}")
+        t1 = time.time()
+        uniq = _unique_channel_flows(sg, dist, best, n)[fb, fd]
+        t_nsp += time.time() - t1
+        uniq_flows += int(uniq.sum())
         shard_dist.append(dist)
         shard_best.append(best.astype(np.int16))
         shard_fb.append(fb.astype(np.int64))
         shard_fd.append(fd.astype(np.int64))
         shard_flen.append(flen)
+        shard_uniq.append(uniq)
         gid0[si + 1] = gid0[si] + len(fb)
         src_flow_counts[srcs] = np.bincount(fb, minlength=len(srcs))
     F = int(gid0[-1])
+    if refine_cap is None:
+        refine_cap = max(300_000, F // 24)
+    stats["refine_cap"] = int(refine_cap)
+    stats["uniq_flows"] = uniq_flows
+    stats["uniq_s"] = round(t_nsp, 3)
     flen_all = (np.concatenate(shard_flen) if F else
                 np.zeros(0, np.int64)).astype(np.int64)
     dst_all = (np.concatenate(shard_fd) if F else
@@ -1820,14 +1932,16 @@ def _select_sharded(at: ATResult, K: int = 8, seed: int = 0,
                 hot_f = hot_nodes[s0 + fb[idx]] | hot_nodes[fd[idx]]
             else:
                 hot_f = np.zeros(len(idx), bool)
+            uq = shard_uniq[si][idx]
             kcap = np.where(hot_f, K, k_min)
             kcap = np.minimum(kcap, np.where(fl == 1, 1,
                                              np.where(fl == 2, 2, K)))
+            kcap = np.where(uq, 1, kcap)
             k_full_flows += int((kcap >= K).sum())
             chan_c, vc_c, kv = _walk_flows(sg, n, n_vc, SEN,
                                            shard_dist[si], shard_best[si],
                                            srcs, fb[idx], fd[idx], fl,
-                                           kcap, K)
+                                           kcap, K, uniq=uq)
             t_walk += time.time() - t1
             t1 = time.time()
             B, _, Lc = chan_c.shape
@@ -1901,10 +2015,11 @@ def _select_sharded(at: ATResult, K: int = 8, seed: int = 0,
                 s0 = si * shard_sources
                 srcs = np.arange(s0, min(s0 + shard_sources, n))
                 fl = shard_flen[si][loc]
+                uq = shard_uniq[si][loc]
                 cc, vv, kvp = _walk_flows(
                     sg, n, n_vc, SEN, shard_dist[si], shard_best[si],
                     srcs, shard_fb[si][loc], shard_fd[si][loc], fl,
-                    np.full(len(loc), K, np.int64), K)
+                    np.where(uq, 1, K).astype(np.int64), K, uniq=uq)
                 parts.append((cc, vv, kvp))
                 Lp = max(Lp, cc.shape[2])
 

@@ -699,8 +699,12 @@ def evaluate_end_to_end(topo: T.Topology, n_vc: int = 2, K: int = 4,
     out["end_to_end_s"] = round(out["at_s"] + out["select_s"] +
                                 out["vcalloc_tables_s"], 3)
     if saturation:
+        sstats: dict = {}
         t0 = time.time()
-        sat, _ = NS.saturation_point(tab, **(sat_kwargs or {}))
+        sat, _ = NS.saturation_point(tab, stats=sstats,
+                                     **(sat_kwargs or {}))
         out["saturation"] = round(float(sat), 5)
         out["saturation_s"] = round(time.time() - t0, 3)
+        out["sim_kernel"] = sstats.get("kernel", "csr")
+        out["sim_array_bytes"] = int(sstats.get("array_bytes", 0))
     return out

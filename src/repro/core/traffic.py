@@ -38,34 +38,51 @@ class CompiledTraffic:
     alias: np.ndarray       # (n, n) int32: alias destination
     src_rate: np.ndarray    # (n,) float32: relative injection rate, mean 1
 
+    def row_probs(self) -> np.ndarray:
+        """Exact (n, n) sampling distribution the alias tables encode
+        (each row sums to 1 for live rows): the inverse of
+        :func:`_alias_tables`, used to re-target a compiled pattern onto
+        a different sampling domain (e.g. CSR flow slots)."""
+        n = self.prob.shape[0]
+        p = self.prob.astype(np.float64) / n
+        rows = np.repeat(np.arange(n), n)
+        np.add.at(p, (rows, self.alias.reshape(-1)),
+                  ((1.0 - self.prob.astype(np.float64)) / n).reshape(-1))
+        return p
 
-def _alias_tables(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """Vose alias construction, batched over all rows at once.
 
-    w: (n, n) non-negative weights. Rows with zero mass get a degenerate
-    table (prob 0, alias 0) and must be masked by ``src_rate == 0`` on
-    the caller side.
+def _alias_tables_ragged(w: np.ndarray,
+                         deg: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Vose alias construction over ragged rows, batched.
 
-    The seed ran Vose's stack loop per row in python (O(n^2) interpreter
-    steps per pattern -- the compile-time bottleneck at 512+ nodes). Here
-    every row keeps its small/large stacks as columns of shared (n, n)
+    ``w`` is (R, W) non-negative weights where only the first ``deg[r]``
+    columns of row ``r`` are real; padding columns never enter the
+    stacks and keep (prob 0, alias = own column). Rows with zero mass
+    get a degenerate self-alias table (prob 0, alias = own column: a
+    draw deterministically returns the drawn slot) and must be masked by
+    ``src_rate == 0`` on the caller side.
+
+    Every row keeps its small/large stacks as columns of shared (R, W)
     index arrays with per-row tops, and each loop iteration retires one
-    small entry of *every* unfinished row: <= 2n vectorised iterations
-    total, identical alias-table semantics.
+    small entry of *every* unfinished row: <= 2W vectorised iterations
+    total, identical alias-table semantics to the per-row scalar loop.
     """
-    n = w.shape[0]
-    prob = np.zeros((n, n), np.float32)
-    alias = np.zeros((n, n), np.int32)
-    total = w.sum(axis=1, dtype=np.float64)
+    R, W = w.shape
+    prob = np.zeros((R, W), np.float32)
+    alias = np.broadcast_to(np.arange(W, dtype=np.int32), (R, W)).copy()
+    colm = np.arange(W)[None, :] < np.asarray(deg)[:, None]
+    wv = np.where(colm, w, 0.0)
+    total = wv.sum(axis=1, dtype=np.float64)
     live = total > 0
     if not live.any():
         return prob, alias
-    q = np.zeros((n, n), np.float64)
-    q[live] = w[live] * (n / total[live, None])
-    prob[live] = 1.0
-    alias[live] = np.arange(n, dtype=np.int32)
-    small_mask = (q < 1.0) & live[:, None]
-    large_mask = (q >= 1.0) & live[:, None]
+    livec = live[:, None] & colm
+    q = np.zeros((R, W), np.float64)
+    q[livec] = (wv * (np.asarray(deg, np.float64)[:, None]
+                      / np.where(live, total, 1.0)[:, None]))[livec]
+    prob[livec] = 1.0
+    small_mask = (q < 1.0) & livec
+    large_mask = (q >= 1.0) & livec
     # left-aligned per-row stacks: first `top` entries are the stack,
     # ascending index order (stable argsort of the mask), top = last
     st_small = np.argsort(~small_mask, kind="stable", axis=1) \
@@ -95,6 +112,92 @@ def _alias_tables(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
             top_l[demote] -= 1
     # leftovers on either stack accept directly (prob stays 1)
     return prob, alias
+
+
+def _alias_tables(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Square (n, n) Vose construction: every column of every row is a
+    real slot (the classic per-destination tables). Thin wrapper over the
+    ragged builder, preserving the historical degenerate-row encoding
+    (zero-mass rows get alias 0 rather than self-alias)."""
+    n = w.shape[0]
+    prob, alias = _alias_tables_ragged(w, np.full(n, n, np.int64))
+    dead = w.sum(axis=1) <= 0
+    alias[dead] = 0
+    return prob, alias
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledFlowTraffic:
+    """Alias tables over the *flow slots* of a CSR path table.
+
+    Where :class:`CompiledTraffic` samples a destination node from
+    (n, n) tables, this samples a routed flow id directly from flat
+    (F,) tables aligned with ``CSRPathTable``'s row-major flow order:
+    draw a slot ``j`` uniformly in ``[0, deg[s])``, then accept
+    ``src_indptr[s] + j`` or take its alias. Demand on unrouted pairs is
+    dropped at compile time (each live row renormalises over its routed
+    flows), so offered traffic is always injectable; memory is O(F), not
+    O(n^2) -- the sampling-side counterpart of the CSR simulator kernel.
+    """
+    n: int
+    src_indptr: np.ndarray  # (n + 1,) int32: flow range of each source
+    deg: np.ndarray         # (n,) int32: routed flow count per source
+    prob: np.ndarray        # (F,) float32: alias acceptance probability
+    alias: np.ndarray       # (F,) int32: alias flow id (global)
+    src_rate: np.ndarray    # (n,) float32: relative injection rate
+
+
+def compile_flow_traffic(traffic, src_indptr: np.ndarray,
+                         dst: np.ndarray,
+                         block: int = 2048) -> CompiledFlowTraffic:
+    """Compile a traffic pattern onto a CSR flow space.
+
+    ``traffic`` is a :class:`TrafficPattern`, a :class:`CompiledTraffic`
+    (re-targeted exactly via :meth:`CompiledTraffic.row_probs`), or
+    ``None`` for uniform. ``src_indptr``/``dst`` come straight from the
+    ``CSRPathTable``. Rows are processed in blocks of ``block`` sources
+    so the padded (block, max_deg) staging arrays stay small at 4096
+    chips.
+    """
+    n = len(src_indptr) - 1
+    F = len(dst)
+    sptr = np.asarray(src_indptr, np.int64)
+    deg = np.diff(sptr).astype(np.int32)
+    prob = np.ones(F, np.float32)
+    alias = np.arange(F, dtype=np.int32)
+    if traffic is None:
+        # uniform over routed flows: all weights equal -> every slot is
+        # exactly "large" (q == 1) and accepts directly; skip the (n, n)
+        # matrix entirely (134 MB at 16^3)
+        return CompiledFlowTraffic(n, sptr.astype(np.int32), deg, prob,
+                                   alias, np.ones(n, np.float32))
+    if isinstance(traffic, CompiledTraffic):
+        matrix = traffic.row_probs()
+        src_rate = np.asarray(traffic.src_rate, np.float32)
+    else:
+        matrix = traffic.matrix
+        src_rate = np.asarray(traffic.src_rate, np.float32)
+    if matrix.shape[0] != n:
+        raise ValueError(f"pattern over {matrix.shape[0]} nodes, table "
+                         f"over {n}")
+    dst64 = np.asarray(dst, np.int64)
+    for s0 in range(0, n, block):
+        s1 = min(s0 + block, n)
+        f0, f1 = int(sptr[s0]), int(sptr[s1])
+        if f1 == f0:
+            continue
+        degb = deg[s0:s1].astype(np.int64)
+        Wb = int(degb.max())
+        colm = np.arange(Wb)[None, :] < degb[:, None]
+        wpad = np.zeros((s1 - s0, Wb), np.float64)
+        flow_src = np.repeat(np.arange(s0, s1), degb)
+        wpad[colm] = matrix[flow_src, dst64[f0:f1]]
+        p, a = _alias_tables_ragged(wpad, degb)
+        prob[f0:f1] = p[colm]
+        alias[f0:f1] = (sptr[s0:s1, None].astype(np.int64)
+                        + a.astype(np.int64))[colm].astype(np.int32)
+    return CompiledFlowTraffic(n, sptr.astype(np.int32), deg, prob, alias,
+                               src_rate)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,183 @@
+"""CSR-vs-dense simulator kernel parity suite.
+
+The CSR-native kernel (`netsim._sweep_csr`) is the production path; the
+legacy dense kernel (`netsim._sweep_dense`) is kept solely as its
+bit-identity oracle. Both draw the same RNG stream and sample the same
+flow slots, so every counter of every rate lane must match exactly --
+delivered, tagged, conservation, all of them -- on any topology small
+enough for the dense (n, n, MAXHOP) tables to exist. The suite also
+pins the memory claim (CSR stages fewer bytes than dense even at tiny
+pods) and, under the opt-in ``huge`` marker, proves the headline: a 12^3
+saturation sweep that the dense layout could never run.
+"""
+import numpy as np
+import pytest
+
+from repro.core import fault as F, netsim as NS, routing as R, \
+    topology as T
+from repro.core.pathtable import CSRPathTable
+from repro.core.traffic import TrafficPattern, compile_flow_traffic
+
+
+def _patterns(topo, at):
+    color = F.colors_in_use(topo)[0]
+    region = F.fault_region_nodes(at, color)
+    return {
+        "uniform": None,
+        "hotspot": TrafficPattern.hotspot(topo.n, frac=0.4),
+        "fault_correlated": TrafficPattern.fault_correlated(
+            topo.n, region, frac=0.6, src_boost=2.0),
+    }
+
+
+@pytest.fixture(scope="module", params=[(4, 4, 4), (4, 4, 8)])
+def pod_tables(request):
+    topo = T.pt(request.param)
+    at = R.allowed_turns(topo, n_vc=2, priority="apl")
+    sel = R.select_paths(at, K=4, local_search_rounds=1, engine="sharded")
+    tab = NS.at_tables(topo, at, sel)
+    return topo, at, tab
+
+
+# ---------------------------------------------------------------------------
+# bit-identity of the two kernels
+# ---------------------------------------------------------------------------
+
+
+def test_csr_and_dense_kernels_bit_identical_across_patterns(pod_tables):
+    topo, at, tab = pod_tables
+    rates = [0.02, 0.08, 0.2, 0.6]
+    for name, tp in _patterns(topo, at).items():
+        s_csr: dict = {}
+        s_dense: dict = {}
+        tc = NS.sweep(tab, rates, traffic=tp, cycles=1200, warmup=400,
+                      kernel="csr", stats=s_csr)
+        td = NS.sweep(tab, rates, traffic=tp, cycles=1200, warmup=400,
+                      kernel="dense", stats=s_dense)
+        assert tc == td, f"kernel divergence under {name}"
+        for r in tc:
+            assert r["injected_total"] == (r["consumed_total"]
+                                           + r["in_flight"]), name
+        assert s_csr["kernel"] == "csr"
+        assert s_dense["kernel"] == "dense"
+        # the memory claim in miniature: CSR stages fewer bytes than the
+        # dense (n, n, MAXHOP) gather tables even at these pod sizes
+        assert s_csr["array_bytes"] < s_dense["array_bytes"]
+
+
+def test_kernels_match_on_dor_tables_and_other_seeds(pod_tables):
+    topo, _, _ = pod_tables
+    tab = NS.dor_tables(topo)
+    for seed in (0, 3):
+        a = NS.run(tab, 0.15, cycles=900, warmup=300, seed=seed,
+                   kernel="csr")
+        b = NS.run(tab, 0.15, cycles=900, warmup=300, seed=seed,
+                   kernel="dense")
+        assert a == b
+    # different seeds genuinely change the sampled stream
+    assert NS.run(tab, 0.15, cycles=900, warmup=300, seed=0) \
+        != NS.run(tab, 0.15, cycles=900, warmup=300, seed=3)
+
+
+def test_kernels_match_under_fault_rerouted_tables():
+    topo = T.pt((4, 4, 4))
+    at = R.allowed_turns(topo, n_vc=2, priority="apl")
+    color = F.colors_in_use(topo)[0]
+    dead = F.dead_channels_for_color(at, color)
+    sel = R.select_paths(at, K=4, local_search_rounds=1,
+                         dead_channels=dead, engine="sharded")
+    tab = NS.at_tables(topo, at, sel)
+    tp = TrafficPattern.fault_correlated(
+        topo.n, F.fault_region_nodes(at, color), frac=0.5)
+    a = NS.sweep(tab, [0.05, 0.3], traffic=tp, cycles=1000, warmup=300,
+                 kernel="csr")
+    b = NS.sweep(tab, [0.05, 0.3], traffic=tp, cycles=1000, warmup=300,
+                 kernel="dense")
+    assert a == b
+
+
+def test_compiled_flow_traffic_reused_across_kernels(pod_tables):
+    """Pre-compiling the pattern onto flow slots must not change counts
+    -- saturation_point relies on compiling once and sharing it."""
+    topo, at, tab = pod_tables
+    tp = TrafficPattern.hotspot(topo.n, frac=0.3)
+    csr = tab.csr()
+    ct = compile_flow_traffic(tp, csr.src_indptr, csr.dst)
+    a = NS.run(tab, 0.1, traffic=ct, cycles=800, warmup=200)
+    b = NS.run(tab, 0.1, traffic=tp, cycles=800, warmup=200)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# saturation parity on the synthesized fabric
+# ---------------------------------------------------------------------------
+
+
+def _load_tons_topo(n):
+    import pickle
+    from pathlib import Path
+    from repro.core.topology import Pod, Topology
+    p = Path(__file__).parent.parent / "benchmarks" / "results" \
+        / f"tons_{n}.pkl"
+    if not p.exists():
+        return None
+    d = pickle.load(open(p, "rb"))
+    return Topology(Pod((4, 4, 8)), [tuple(e) for e in d["optical"]],
+                    name=f"TONS_SYM {n}")
+
+
+@pytest.mark.slow
+def test_csr_saturation_matches_dense_on_synthesized_128():
+    topo = _load_tons_topo(128)
+    if topo is None:
+        pytest.skip("no synthesized tons_128.pkl artifact")
+    at = R.allowed_turns(topo, n_vc=2, priority="apl")
+    sel = R.select_paths(at, K=4, local_search_rounds=1,
+                         engine="sharded")
+    tab = NS.at_tables(topo, at, sel)
+    sat_c, tr_c = NS.saturation_point(tab, step=0.05, cycles=1500,
+                                      warmup=500, kernel="csr")
+    sat_d, tr_d = NS.saturation_point(tab, step=0.05, cycles=1500,
+                                      warmup=500, kernel="dense")
+    assert sat_c == sat_d
+    assert tr_c == tr_d
+
+
+# ---------------------------------------------------------------------------
+# the headline: scales the dense layout cannot reach
+# ---------------------------------------------------------------------------
+
+
+def test_sim_tables_stay_csr_and_cache_views(pod_tables):
+    _, _, tab = pod_tables
+    assert isinstance(tab.table, CSRPathTable)
+    d1 = tab.dense()
+    c1 = tab.csr()
+    assert tab.dense() is d1 and tab.csr() is c1  # cached, not rebuilt
+    assert isinstance(tab.table, CSRPathTable)    # never swapped out
+    assert c1 is tab.table
+    assert c1.nbytes() < d1.nbytes()
+
+
+@pytest.mark.huge
+@pytest.mark.slow
+def test_12cube_csr_saturation_smoke():
+    """12^3 saturation via the CSR kernel (opt-in ``-m huge``): the
+    scale the dense (n, n, MAXHOP) layout cannot stage at all."""
+    topo = T.pt((12, 12, 12))
+    at = R.allowed_turns(topo, n_vc=2, priority="apl")
+    sel = R.select_paths(at, K=4, local_search_rounds=1,
+                         engine="sharded")
+    assert sel.unreachable == 0
+    tab = NS.at_tables(topo, at, sel)
+    assert isinstance(tab.table, CSRPathTable)
+    stats: dict = {}
+    sat, trace = NS.saturation_point(tab, step=0.05, max_rate=0.5,
+                                     cycles=1200, warmup=400,
+                                     kernel="csr", stats=stats)
+    assert sat > 0.0
+    assert all(r["injected_total"] == r["consumed_total"] + r["in_flight"]
+               for r in trace)
+    # the whole staged working set stays far below the ~1.7 GB the dense
+    # tables alone would need at n=1728
+    assert stats["array_bytes"] < 400 * 1024 * 1024

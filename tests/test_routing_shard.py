@@ -82,11 +82,57 @@ def test_sharded_under_fault_matches_array_reachability(pod_routed):
 def test_sharded_stats_surface_stage_split_and_counters(pod_routed):
     _, _, arr, sh = pod_routed
     for k in ("bfs_s", "walk_s", "greedy_s", "refine_s", "refine_pool",
-              "refine_moved", "k_full_flows"):
+              "refine_moved", "k_full_flows", "refine_cap", "uniq_flows",
+              "uniq_s"):
         assert k in sh.stats
+    # the kcap=1 fast lane must actually fire on these pods: a healthy
+    # fraction of flows is channel-path-unique even on symmetric tori
+    assert sh.stats["uniq_flows"] > 0
     for k in ("enumerate_s", "greedy_s", "local_search_s", "hot_peel_s",
               "hot_walk_s"):
         assert k in arr.stats
+
+
+def test_unique_channel_flows_matches_brute_force_enumeration():
+    """The kcap=1 fast-lane predicate (all shortest state paths share
+    one channel projection) must agree with explicit path enumeration,
+    with and without dead channels breaking the torus symmetry."""
+    topo = T.pt((4, 4, 4))
+    at = R.allowed_turns(topo, n_vc=2, priority="apl")
+    sg = R._build_state_graph(at)
+    color = F.colors_in_use(topo)[0]
+    dead = F.dead_channels_for_color(at, color)
+    for dead_set in (None, dead):
+        srcs = np.arange(topo.n)
+        dist = R.state_bfs(at, srcs, dead_set)
+        best = R.node_distances(at, srcs, dist=dist)
+        uniq = R._unique_channel_flows(sg, dist, best, topo.n)
+        rng = np.random.default_rng(7)
+        rows = rng.choice(topo.n, size=8, replace=False)
+        for b in rows:
+            db = dist[b]
+            for d in range(topo.n):
+                L = best[b, d]
+                if L <= 0:
+                    continue
+                arrivals = [v for v in np.nonzero(sg.dst_node == d)[0]
+                            if db[v] == L]
+                projs: set = set()
+
+                def walk(v, lvl, suffix):
+                    if len(projs) > 2:
+                        return
+                    suffix = (int(v) // sg.n_vc,) + suffix
+                    if lvl == 1:
+                        projs.add(suffix)
+                        return
+                    for p in sg.rev_pad[v]:
+                        if p >= 0 and db[p] == lvl - 1:
+                            walk(p, lvl - 1, suffix)
+
+                for v in arrivals:
+                    walk(v, L, ())
+                assert (len(projs) == 1) == bool(uniq[b, d]), (b, d)
 
 
 # ---------------------------------------------------------------------------
@@ -126,12 +172,18 @@ def test_build_tables_bit_identical_for_csr_and_dense(pod_routed):
     topo, at, _, sh = pod_routed
     t_csr = NS.build_tables(topo, sh.table)
     t_dense = NS.build_tables(topo, sh.table.to_dense())
-    # the CSR SimTables densifies lazily on first array access
+    # dense views are cached on the side; `table` keeps the CSR layout
+    # the simulator kernel consumes natively
     assert isinstance(t_csr.table, CSRPathTable)
     np.testing.assert_array_equal(t_csr.path, t_dense.path)
     np.testing.assert_array_equal(t_csr.vcs, t_dense.vcs)
     np.testing.assert_array_equal(t_csr.hops, t_dense.hops)
-    assert isinstance(t_csr.table, PathTable)
+    assert isinstance(t_csr.table, CSRPathTable)
+    # and the dense table's CSR view round-trips bit-identically
+    c2 = t_dense.csr()
+    for a, b in ((c2.src_indptr, sh.table.src_indptr),
+                 (c2.dst, sh.table.dst), (c2.chan, sh.table.chan)):
+        np.testing.assert_array_equal(a, b)
 
 
 def test_csr_sim_runs_and_conserves_packets(pod_routed):
