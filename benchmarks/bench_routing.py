@@ -23,14 +23,24 @@ opt-in 1728-chip 12^3 and 4096-chip 16^3 pods under ``--full``:
   chains routed by the sharded engine into a packed CSR PathTable
   (allowed turns -> sharded select -> VC alloc -> simulator tables).
 
+Also runs the **time-to-recover lane**: build a live
+:class:`repro.core.repair.ServingState` at 8^3 (PDTT fabric, robust
+AT, n_vc=2, K=4 -- the serving configuration), kill one OCS, and
+measure :func:`repro.core.repair.repair_fault` against the
+:func:`full_recompute` oracle -- repair wall clock, flows re-routed and
+the post-repair ``l_max`` ratio land in the JSON, ``--full`` extends the
+lane to the 12^3 pod.
+
 ``--json`` (or ``main(json_path=...)``) writes BENCH_routing.json so the
 perf trajectory is tracked from PR to PR; prior results, if any, are
 loaded tolerantly and printed for comparison (guards skip with a warning
 on a fresh checkout with no stored baseline), and regression guards warn
--- and trip ``run.py --check`` -- when the 8^3 ``allowed_turns_s`` or
-``array_select_s`` regress more than 1.5x against the stored baseline.
-Guarded timings are the *median of 3* repeats: container timing is noisy
-enough that single-shot 1.5x guards false-positive.
+-- and trip ``run.py --check`` -- when the 8^3 ``allowed_turns_s``,
+``array_select_s`` or the repair lane's ``repair_s`` regress more than
+1.5x against the stored baseline, or when the post-repair ``l_max``
+exceeds 1.10x of the full recompute's. Guarded timings are the *median
+of 3* repeats: container timing is noisy enough that single-shot 1.5x
+guards false-positive.
 """
 from __future__ import annotations
 
@@ -51,6 +61,8 @@ REF_CAP = 256          # largest pod the reference engines run in quick mode
 SHARDED_ONLY = 1000    # above this, only the sharded engine routes
 AT_REGRESSION = 1.5    # warn when 8^3 allowed_turns_s regresses past this
 SELECT_REGRESSION = 1.5  # same guard for the 8^3 array_select_s
+REPAIR_REGRESSION = 1.5  # same guard for the 8^3 single-OCS repair wall
+REPAIR_L_MAX = 1.10    # post-repair l_max quality bound vs full recompute
 
 
 def _at_breakdown(at) -> dict:
@@ -84,6 +96,71 @@ def _select_stages(routed) -> dict:
     return {k: s.get(k, 0.0) for k in
             ("enumerate_s", "greedy_s", "local_search_s", "hot_peel_s",
              "hot_walk_s")}
+
+
+def _repair_lane(full: bool, prior: dict, result: dict,
+                 json_path) -> None:
+    """Time-to-recover: single-OCS failure under a live serving state.
+
+    The lane runs the serving configuration (PDTT fabric, robust AT,
+    n_vc=2, K=4) -- the state an online fabric actually repairs from,
+    on the fabric fig8 and tests/test_repair.py exercise. The n512
+    repair wall is a median of 3 (the repair path is pure, so repeats
+    are exact re-runs) and feeds a 1.5x guard; the post-repair l_max
+    ratio vs the full-recompute oracle feeds a 1.10x quality guard.
+    """
+    from repro.core import fault as F, topology as T
+    from repro.core.repair import ServingState, full_recompute, repair_fault
+
+    out = result.setdefault("repair", {})
+    specs = [("n512", (8, 8, 8))] + \
+        ([("n1728", (12, 12, 12))] if full else [])
+    for name, spec in specs:
+        topo = T.pdtt(spec)      # the paper fabric fig8/test_repair use
+        t0 = time.time()
+        st = ServingState.build(topo, n_vc=2, K=4, seed=0, robust=True)
+        t_build = time.time() - t0
+        dead = F.dead_channels_for_color(st.at, F.colors_in_use(topo)[0])
+        rr, t_rep = median_timed(lambda: repair_fault(st, dead),
+                                 repeats=3 if name == "n512" else 1)
+        routed, _, _ = full_recompute(st, dead)
+        ratio = rr.l_max / max(routed.l_max, 1e-9)
+        out[name] = {
+            "pod": list(spec),
+            "build_s": round(t_build, 3),
+            "repair_s": round(t_rep, 3),
+            "flows_rerouted": rr.flows_rerouted,
+            "readmitted": rr.readmitted,
+            "unreachable": rr.unreachable,
+            "deadlock_free": rr.deadlock_free,
+            "fallback": rr.fallback,
+            "repair_l_max": rr.l_max,
+            "recompute_l_max": routed.l_max,
+            "repair_l_max_ratio": round(ratio, 4),
+            "repair_stages": {k: round(v, 3) if isinstance(v, float)
+                              else v for k, v in rr.stats.items()},
+        }
+        print(f"  {name}: repair={t_rep:.2f}s (build={t_build:.1f}s -> "
+              f"{t_build / max(t_rep, 1e-9):.0f}x faster than cold) "
+              f"flows={rr.flows_rerouted} readmit={rr.readmitted} "
+              f"lmax {rr.l_max:.0f}/{routed.l_max:.0f} "
+              f"({ratio:.3f}x) unreachable={rr.unreachable}")
+        assert rr.deadlock_free and rr.unreachable == 0 and not rr.fallback
+    n512 = out["n512"]
+    emit("bench_routing_repair_n512", n512["repair_s"] * 1e6,
+         f"flows={n512['flows_rerouted']} "
+         f"ratio={n512['repair_l_max_ratio']:.3f}")
+    if json_path:
+        prior_rep = prior.get("repair", {}).get("n512", {})
+        guard_regression("routing_n512_repair_s", n512["repair_s"],
+                         prior_rep.get("repair_s"), REPAIR_REGRESSION)
+        # quality guard: fixed 1.0 baseline -> trips when the repaired
+        # l_max drifts past REPAIR_L_MAX x the full-recompute oracle
+        guard_regression("routing_n512_repair_l_max_ratio",
+                         n512["repair_l_max_ratio"], 1.0, REPAIR_L_MAX)
+        prior_full = prior.get("repair", {}).get("n1728")
+        if not full and prior_full and "n1728" not in out:
+            out["n1728"] = prior_full   # keep the --full record around
 
 
 def main(full: bool = False, json_path=None) -> dict:
@@ -227,6 +304,7 @@ def main(full: bool = False, json_path=None) -> dict:
             guard_regression(f"routing_n512_{key}",
                              result["sizes"]["n512"].get(key),
                              prior_512.get(key), bound)
+    _repair_lane(full, prior, result, json_path)
     result["peak_rss_mb"] = peak_rss_mb()
     if prior.get("sizes", {}).get("n64", {}).get("speedup"):
         print(f"  prior n64 speedup: {prior['sizes']['n64']['speedup']}x")

@@ -38,10 +38,15 @@ def main() -> int:
                          "incl. the batched allowed-turns admission "
                          "breakdown, per-stage select splits for the "
                          "array and streaming sharded engines, and VC "
-                         "greedy-dead-end counters; with --full also the "
+                         "greedy-dead-end counters; the guarded 8^3 "
+                         "time-to-recover lane -- single-OCS repair wall "
+                         "clock, flows re-routed and post-repair l_max "
+                         "ratio vs the full-recompute oracle; with "
+                         "--full also the "
                          "1728-chip 12^3 and 4096-chip 16^3 end-to-end "
                          "entries routed by the sharded engine into the "
-                         "CSR PathTable) and BENCH_synthesis.json "
+                         "CSR PathTable plus the 12^3 repair entry) and "
+                         "BENCH_synthesis.json "
                          "(batched LP synthesis wall-clock, lambda vs "
                          "the Basu bound, routed l_max + saturation of "
                          "synthesized vs torus pods; --full adds the "

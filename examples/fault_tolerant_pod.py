@@ -50,6 +50,23 @@ def main() -> None:
           f"({routed.l_max / base.l_max:.2f}x degradation)")
     assert routed.unreachable == 0
 
+    # online repair: the serving fabric patches itself instead of
+    # recomputing -- only the flows crossing dead channels re-route
+    import time
+    from repro.core.repair import ServingState, repair_fault
+    t0 = time.time()
+    st = ServingState.build(topo, n_vc=2, K=4, robust=True)
+    t_build = time.time() - t0
+    t0 = time.time()
+    rr = repair_fault(st, dead)
+    t_rep = time.time() - t0
+    assert rr.unreachable == 0 and rr.deadlock_free
+    print(f"online repair: {rr.flows_rerouted} of "
+          f"{st.table.n_flows} flows re-routed in {t_rep:.2f}s "
+          f"(cold build {t_build:.1f}s, "
+          f"{t_build / max(t_rep, 1e-9):.0f}x), "
+          f"L_max={rr.l_max:.0f}, deadlock-free")
+
     # simulate the degraded fabric under several traffic patterns: one
     # vmapped kernel serves them all, only the alias tables change
     from repro.core import netsim as NS

@@ -13,18 +13,36 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.repair import RepairResult, ServingState, repair_fault
 from repro.core.routing import ATResult, RoutingResult, allowed_turns, \
     select_paths
 from repro.core.topology import N_COLORS, Topology
 
 
 def colors_in_use(topo: Topology) -> List[int]:
-    return sorted({c for _, _, c in topo.optical})
+    col = topo.edge_colors()
+    return np.unique(col[col >= 0]).astype(np.int64).tolist()
 
 
-def dead_channels_for_color(at: ATResult, color: int) -> set:
+def dead_channels_for_color(at: ATResult, color: int) -> np.ndarray:
+    """Channel ids of every optical link through OCS ``color``, as a
+    sorted int64 array (the form the routing/repair hot paths consume
+    directly -- no python sets on the per-fault path). The channels-by-
+    color grouping is built once per :class:`Channels` and cached, so a
+    sweep over all colors pays one argsort total."""
     ch = at.channels
-    return set(np.nonzero(ch.color == color)[0].tolist())
+    cache = ch.__dict__.get("_color_csr")
+    if cache is None:
+        order = np.argsort(ch.color, kind="stable").astype(np.int64)
+        vals = ch.color[order]
+        ucol, starts = np.unique(vals, return_index=True)
+        cache = (order, ucol, np.append(starts, len(vals)))
+        ch.__dict__["_color_csr"] = cache
+    order, ucol, starts = cache
+    i = int(np.searchsorted(ucol, color))
+    if i >= len(ucol) or ucol[i] != color:
+        return np.zeros(0, np.int64)
+    return np.sort(order[starts[i]:starts[i + 1]])
 
 
 def fault_region_nodes(at: ATResult, color: int) -> np.ndarray:
@@ -56,16 +74,35 @@ class FaultSweepResult:
     color: int
     routed: RoutingResult
     connected: bool
+    repair: Optional[RepairResult] = None   # set in repair mode
 
 
-def fault_sweep(topo: Topology, at: ATResult, K: int = 6, seed: int = 0
+def fault_sweep(topo: Topology, at: ATResult, K: int = 6, seed: int = 0,
+                repair_from: Optional[ServingState] = None
                 ) -> List[FaultSweepResult]:
-    """Re-route under each single-OCS fault using the (robust) AT set."""
+    """Re-route under each single-OCS fault using the (robust) AT set.
+
+    ``repair_from`` switches the sweep to the incremental path: each
+    fault is repaired from that live :class:`ServingState`
+    (:func:`repro.core.repair.repair_fault`) instead of re-selecting
+    every flow against the masked AT -- each color independently, like
+    the recompute mode. The per-fault :class:`RepairResult` rides on the
+    sweep entries.
+    """
     out = []
-    n_pairs = topo.n * (topo.n - 1)
     for color in colors_in_use(topo):
         dead = dead_channels_for_color(at, color)
-        routed = select_paths(at, K=K, seed=seed, dead_channels=dead)
-        out.append(FaultSweepResult(color, routed,
-                                    routed.unreachable == 0))
+        if repair_from is not None:
+            rr = repair_fault(repair_from, dead)
+            st = rr.state
+            routed = RoutingResult(
+                st.table, st.loads[:-1].astype(np.float64),
+                float(rr.l_max), st.table.avg_hops(), rr.unreachable,
+                stats=rr.stats)
+            out.append(FaultSweepResult(color, routed,
+                                        rr.unreachable == 0, repair=rr))
+        else:
+            routed = select_paths(at, K=K, seed=seed, dead_channels=dead)
+            out.append(FaultSweepResult(color, routed,
+                                        routed.unreachable == 0))
     return out

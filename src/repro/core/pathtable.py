@@ -268,6 +268,39 @@ class CSRPathTable:
         idx = self.hop_indptr[lo:hi, None] + pos
         self.vc[idx[live]] = V[live].astype(np.int8)
 
+    def gather_paths(self, flows: np.ndarray) -> Tuple[np.ndarray,
+                                                       np.ndarray,
+                                                       np.ndarray]:
+        """Arbitrary flow subset as padded arrays -- the scatter/gather
+        twin of :meth:`block_paths` for non-contiguous flow pools (the
+        fault-repair re-route touches exactly the flows crossing dead
+        channels, which are spread across every source). Returns
+        ``(chan (B, W), vc (B, W), lens (B,))``, ``chan`` -1-padded."""
+        flows = np.asarray(flows, np.int64)
+        lens = (self.hop_indptr[flows + 1]
+                - self.hop_indptr[flows]).astype(np.int64)
+        B = len(flows)
+        W = int(lens.max()) if B and lens.size else 1
+        P = np.full((B, W), -1, np.int64)
+        V = np.zeros((B, W), np.int8)
+        pos = np.arange(W)[None, :]
+        live = pos < lens[:, None]
+        idx = self.hop_indptr[flows, None] + pos
+        P[live] = self.chan[idx[live]]
+        V[live] = self.vc[idx[live]]
+        return P, V, lens
+
+    def set_flow_vcs(self, flows: np.ndarray, V: np.ndarray,
+                     lens: np.ndarray) -> None:
+        """Write padded per-hop VCs ``V (B, W)`` back for an arbitrary
+        flow subset (twin of :meth:`set_block_vcs`)."""
+        flows = np.asarray(flows, np.int64)
+        W = V.shape[1]
+        pos = np.arange(W)[None, :]
+        live = pos < lens[:, None]
+        idx = self.hop_indptr[flows, None] + pos
+        self.vc[idx[live]] = V[live].astype(np.int8)
+
     # ---- vectorised statistics (PathTable API parity) ---------------------
 
     def routed_mask(self) -> np.ndarray:

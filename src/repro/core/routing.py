@@ -296,6 +296,13 @@ class ATResult:
         default=None, repr=False, compare=False)   # (E, 2) state edges
     _by_in: Optional[Dict] = dataclasses.field(
         default=None, repr=False, compare=False)
+    _admission: Optional[Dict] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # ^ batched-engine admission snapshot (final topological levels, the
+    #   (T, n_vo) accepted grid, base turns, VC-order pairs, priority
+    #   permutation, per-state slot capacities, cumulative dead-turn
+    #   mask). The fault-repair pipeline (repro.core.repair) patches it
+    #   in place of replaying the full turn admission.
 
     def is_allowed(self, cin, v0, cout, v1) -> bool:
         return ((cin, v0), (cout, v1)) in self.allowed
@@ -1031,7 +1038,11 @@ def _allowed_turns_batched(topo: Topology, n_vc: int, priority: str,
                       zip(cout[tr].tolist(), vo[tv, 1].tolist())))
     stats["allowed"] = len(allowed)
     stats["engine"] = "batched"
-    return ATResult(ch, n_vc, allowed, trees, stats=stats, _edges=edges)
+    admission = {"level": eng.level, "acc": acc, "turns": turns, "vo": vo,
+                 "perm": perm, "cap_out": cap_out,
+                 "dead_turn": np.zeros(T, bool)}
+    return ATResult(ch, n_vc, allowed, trees, stats=stats, _edges=edges,
+                    _admission=admission)
 
 
 def _allowed_turns_reference(topo: Topology, n_vc: int, priority: str,
@@ -1111,6 +1122,21 @@ def allowed_turns(topo: Topology, n_vc: int = 2, priority: str = "apl",
                                   chosen_loads)
 
 
+def _dead_channel_array(dead_channels) -> Optional[np.ndarray]:
+    """Normalise a dead-channel collection (python set, list, or int
+    array -- :func:`repro.core.fault.dead_channels_for_color` returns a
+    sorted array) to a sorted int64 array, or ``None`` when empty."""
+    if dead_channels is None:
+        return None
+    if isinstance(dead_channels, np.ndarray):
+        dc = dead_channels.astype(np.int64, copy=False)
+    else:
+        dc = np.fromiter(dead_channels, np.int64, len(dead_channels))
+    if not len(dc):
+        return None
+    return np.unique(dc)
+
+
 # ---------------------------------------------------------------------------
 # Reference enumerator (per-source python BFS) -- kept as the equivalence
 # oracle for the array engine below; not on the hot path.
@@ -1122,7 +1148,8 @@ def shortest_path_states(at: ATResult, source: int,
     """BFS over (channel, vc) states from `source`; returns dist + parents
     per state and best distance per destination node. Reference oracle."""
     n_vc = at.n_vc
-    dead = dead_channels or set()
+    dc = _dead_channel_array(dead_channels)
+    dead = set() if dc is None else set(dc.tolist())
     dist: Dict[Tuple[int, int], int] = {}
     parents: Dict[Tuple[int, int], List[Tuple[int, int]]] = defaultdict(list)
     q = deque()
@@ -1210,8 +1237,8 @@ def state_bfs(at: ATResult, sources: Sequence[int],
     sources = np.asarray(sources, np.int64)
     B = len(sources)
     dead_state = np.zeros(S, bool)
-    if dead_channels:
-        dc = np.fromiter(dead_channels, np.int64, len(dead_channels))
+    dc = _dead_channel_array(dead_channels)
+    if dc is not None:
         dead_state[(dc[:, None] * n_vc + np.arange(n_vc)).ravel()] = True
     dist = np.full((B, S), -1, np.int16)
     frontier = np.zeros((B, S), bool)
@@ -1376,8 +1403,18 @@ def _walk_flows(sg: StateGraph, n: int, n_vc: int, SEN: int,
     point). Walkers of one flow at the same decision point share the
     rotation, so distinctness is unaffected.
 
+    The walk tolerates *stale* distance fields (the fault-repair path
+    re-walks against distances stored before channels died, with the
+    dead states masked to -1): a walker whose frontier has no valid
+    parent -- or a flow with no live arrival state at its recorded
+    length -- is marked dead and its slot dropped from ``k_valid``
+    instead of asserting. Every *completed* chain is still a real edge
+    path of the claimed length, so stale fields only cost completeness,
+    never soundness. With a BFS-consistent ``dist`` (every other
+    caller) no walker can die and the output is unchanged.
+
     Returns SEN-padded ``chan (F_c, K, Lmax)``, ``vc`` and ``k_valid``
-    (budget mask minus within-flow duplicates).
+    (budget mask minus dead walkers and within-flow duplicates).
     """
     S = sg.n_states
     Lmax = int(flen.max())
@@ -1399,14 +1436,23 @@ def _walk_flows(sg: StateGraph, n: int, n_vc: int, SEN: int,
     Wr = int(kcap.sum())
     wflow = np.repeat(np.arange(Fc), kcap)
     wk = np.arange(Wr) - np.repeat(wstart, kcap)         # slot per walker
-    start = st_sorted[off[wflow]
-                      + ((wk + fhash[wflow]) % cnt[wflow])
-                      .astype(np.int64)]
-    code = (wk // cnt[wflow]).astype(np.int64)
+    alive = np.ones(Wr, bool)
+    cnt_safe = np.maximum(cnt, 1)
+    if len(st_sorted):
+        sidx = off[wflow] + ((wk + fhash[wflow]) % cnt_safe[wflow]) \
+            .astype(np.int64)
+        start = st_sorted[np.minimum(sidx, len(st_sorted) - 1)]
+    else:
+        start = np.zeros(Wr, np.int64)
+    code = (wk // cnt_safe[wflow]).astype(np.int64)
     cur = start.astype(np.int64)
     wrow = fb[wflow]
-    wlen = flen[wflow]
+    wlen = flen[wflow].copy()
     whash = fhash[wflow]
+    dead0 = cnt[wflow] == 0          # no live arrival state at this length
+    if dead0.any():
+        alive[dead0] = False
+        wlen[dead0] = 0
     chan_buf = np.full((Wr, Lmax), SEN, np.int32)
     vc_buf = np.zeros((Wr, Lmax), np.int8)
     chan_buf[np.arange(Wr), wlen - 1] = cur // n_vc
@@ -1420,15 +1466,28 @@ def _walk_flows(sg: StateGraph, n: int, n_vc: int, SEN: int,
         if wuniq is not None and wuniq[act].any():
             ua = wuniq[act]
             au = np.nonzero(ua)[0]
+            oku = ok[au]
+            ubad = ~oku.any(axis=1)
+            if ubad.any():                   # stale dist: walker is stuck
+                alive[act[au[ubad]]] = False
+                wlen[act[au[ubad]]] = 0
+                au, oku = au[~ubad], oku[~ubad]
             # unique flows: the only valid parent, no slot arithmetic
-            cur[act[au]] = par[au, ok[au].argmax(axis=1)]
+            cur[act[au]] = par[au, oku.argmax(axis=1)]
             ga = np.nonzero(~ua)[0]
         else:
             ga = np.arange(len(act))
         if len(ga):
             ag = act[ga]
             okg = ok[ga]
-            npar = okg.sum(axis=1)                       # >= 1 (BFS)
+            npar = okg.sum(axis=1)           # >= 1 with consistent dist
+            bad = npar == 0
+            if bad.any():                    # stale dist: walker is stuck
+                alive[ag[bad]] = False
+                wlen[ag[bad]] = 0
+                ga, ag = ga[~bad], ag[~bad]
+                okg, npar = okg[~bad], npar[~bad]
+        if len(ga):
             rot = ((whash[ag] + cur[ag].astype(np.uint64)
                     * np.uint64(0x9E3779B9)
                     + np.uint64(lvl) * np.uint64(0xC2B2AE35))
@@ -1437,6 +1496,7 @@ def _walk_flows(sg: StateGraph, n: int, n_vc: int, SEN: int,
             code[ag] //= npar
             sel = okg & (np.cumsum(okg, axis=1) == (pick + 1)[:, None])
             cur[ag] = par[ga, sel.argmax(axis=1)]
+        act = act[alive[act]]
         chan_buf[act, lvl - 2] = (cur[act] // n_vc).astype(np.int32)
         vc_buf[act, lvl - 2] = (cur[act] % n_vc).astype(np.int8)
     # dedupe within each flow's slots (64-bit polynomial path hash;
@@ -1454,7 +1514,7 @@ def _walk_flows(sg: StateGraph, n: int, n_vc: int, SEN: int,
     hh = np.zeros((Fc, K), np.uint64)
     hh[wflow, wk] = h
     valid_slot = np.zeros((Fc, K), bool)
-    valid_slot[wflow, wk] = True
+    valid_slot[wflow, wk] = alive
     k_valid = valid_slot.copy()
     for k in range(1, K):
         dup = (hh[:, k:k + 1] == hh[:, :k]) & valid_slot[:, :k] \
@@ -1543,7 +1603,10 @@ def select_paths(at: ATResult, K: int = 8, seed: int = 0,
                  engine: str = "array", block: Optional[int] = None,
                  shard_sources: int = 64, rounds: int = 4,
                  k_min: Optional[int] = None,
-                 refine_cap: Optional[int] = None) -> RoutingResult:
+                 refine_cap: Optional[int] = None,
+                 uniq_dp="auto",
+                 dist_out: Optional[np.ndarray] = None,
+                 best_out: Optional[np.ndarray] = None) -> RoutingResult:
     """Min-max channel load selection: greedy + local search (the paper
     solves an ILP with Gurobi; we report the achieved L_max against the
     lower bound so the optimality gap is visible).
@@ -1569,6 +1632,16 @@ def select_paths(at: ATResult, K: int = 8, seed: int = 0,
     :class:`~repro.core.pathtable.CSRPathTable` (memory scales with total
     hops, not ``n^2 * MAXHOP``), which the rest of the pipeline consumes
     directly.
+
+    ``uniq_dp`` gates the sharded engine's kcap=1 unique-shortest-path
+    DP: ``"auto"`` (default) enables it only on faulted fabrics or pods
+    up to 512 nodes, where it pays for itself (at 16^3 it costs ~100s
+    against smaller walk savings). ``dist_out (n, S) / best_out (n, n)``
+    accept preallocated arrays that the sharded engine fills with every
+    source's BFS state-distance and node-distance fields -- the
+    fault-repair pipeline (:mod:`repro.core.repair`) stores these at
+    build time so repairs can re-walk pooled flows without re-running
+    the BFS.
     """
     if engine == "reference":
         return _select_paths_reference(at, K=K, seed=seed,
@@ -1581,7 +1654,8 @@ def select_paths(at: ATResult, K: int = 8, seed: int = 0,
                                block=block or 512,
                                shard_sources=shard_sources,
                                rounds=rounds, k_min=k_min,
-                               refine_cap=refine_cap)
+                               refine_cap=refine_cap, uniq_dp=uniq_dp,
+                               dist_out=dist_out, best_out=best_out)
     if engine != "array":
         raise ValueError(f"unknown engine {engine!r}")
     t0 = time.time()
@@ -1777,6 +1851,130 @@ def _hot_pool(loads: np.ndarray, chan_flat: np.ndarray,
     return np.unique(flow_of_hop[hot[chan_flat]]).astype(np.int64), thresh
 
 
+def _refine_candidates(loads: np.ndarray, candP: np.ndarray,
+                       kvP: np.ndarray, pchosen: np.ndarray, rng,
+                       SEN: int, BIG: np.int64,
+                       local_search_rounds: int, refine_block: int,
+                       lm_before: int
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact own-load-removal local search + safe hot-set peel + bounded
+    sequential hot-channel walk over a re-walked candidate pool
+    ``candP (P, K, L)`` with slot choices ``pchosen``, snapshot-guarded
+    so the achieved ``l_max`` never regresses past ``lm_before``.
+
+    This is the sharded engine's cross-shard refinement primitive,
+    shared verbatim with the fault-repair re-route
+    (:func:`repro.core.repair.repair_fault`): the repair pool's flows
+    are refined against the live load vector exactly like a hot-pool
+    sweep. ``loads`` includes every flow outside the pool as fixed
+    background. Returns the (possibly snapshot-restored) ``loads`` and
+    ``pchosen``; the caller writes moved flows back into its table.
+    """
+    ar = np.arange
+    P = len(pchosen)
+    snap = (loads.copy(), pchosen.copy(), lm_before)
+    # exact own-load-removal local search over the pool (small
+    # blocks: concurrent same-block moves collide on the same
+    # cold channels, and the churn costs ~5% l_max at 1024)
+    for _ in range(local_search_rounds):
+        changed = 0
+        for i in range(0, P, refine_block):
+            b = slice(i, min(i + refine_block, P))
+            B2 = b.stop - b.start
+            bc = candP[b]
+            cur = bc[ar(B2), pchosen[b]]
+            ladj = loads[bc] - (bc[:, :, :, None]
+                                == cur[:, None, None, :]).sum(axis=3)
+            ladj = np.where(bc == SEN, 0, ladj)
+            cost = ladj.max(axis=2) * BIG + ladj.sum(axis=2)
+            cost[~kvP[b]] = np.iinfo(np.int64).max
+            newc = cost.argmin(axis=1)
+            better = cost[ar(B2), newc] < cost[ar(B2), pchosen[b]]
+            mv = np.nonzero(better)[0]
+            if len(mv):
+                np.add.at(loads, cur[mv].ravel(), -1)
+                np.add.at(loads, bc[mv, newc[mv]].ravel(), 1)
+                loads[SEN] = 0
+                pchosen[i + mv] = newc[mv]
+                changed += len(mv)
+        lm_now = int(loads[:SEN].max())
+        if lm_now < snap[2]:
+            snap = (loads.copy(), pchosen.copy(), lm_now)
+        if changed == 0:
+            break
+    # safe hot-set peel (single moves can never mint a new max)
+    stall = 0
+    for _ in range(64):
+        lm = int(loads[:SEN].max())
+        if lm <= 1:
+            break
+        hot_mask = np.zeros(SEN + 1, bool)
+        hot_mask[:SEN][loads[:SEN] == lm] = True
+        sel = candP[ar(P), pchosen]
+        hf = np.nonzero(hot_mask[sel].any(axis=1))[0]
+        if not len(hf):
+            break
+        bc = candP[hf]
+        cur = sel[hf]
+        ladj = loads[bc] - (bc[:, :, :, None]
+                            == cur[:, None, None, :]).sum(axis=3)
+        ladj = np.where(bc == SEN, 0, ladj)
+        safe = (ladj <= lm - 2).all(axis=2) & kvP[hf]
+        cost = ladj.max(axis=2) * BIG + ladj.sum(axis=2)
+        cost[~safe] = np.iinfo(np.int64).max
+        newc = cost.argmin(axis=1)
+        mv = np.nonzero(safe[ar(len(hf)), newc])[0]
+        if len(mv) == 0:
+            break
+        np.add.at(loads, cur[mv].ravel(), -1)
+        np.add.at(loads, bc[mv, newc[mv]].ravel(), 1)
+        loads[SEN] = 0
+        pchosen[hf[mv]] = newc[mv]
+        lm_now = loads[:SEN].max()
+        if lm_now < snap[2]:
+            snap = (loads.copy(), pchosen.copy(), int(lm_now))
+            stall = 0
+        else:
+            stall += 1
+            if stall >= 4:
+                break
+    if snap[2] < loads[:SEN].max():
+        loads, pchosen = snap[0].copy(), snap[1].copy()
+    # short sequential hot-channel walk (exact reference rule)
+    stall = 0
+    best_walk = int(loads[:SEN].max())
+    for _ in range(8):
+        improved = False
+        hot = int(np.argmax(loads[:SEN]))
+        hot_flows = np.nonzero(
+            (candP[ar(P), pchosen] == hot).any(axis=1))[0]
+        rng.shuffle(hot_flows)
+        for f in hot_flows[:4096]:
+            np.add.at(loads, candP[f, pchosen[f]], -1)
+            loads[SEN] = 0
+            l = loads[candP[f]]
+            cost = l.max(axis=1) * BIG + l.sum(axis=1)
+            cost = np.where(kvP[f], cost, np.iinfo(np.int64).max)
+            bestk = int(np.argmin(cost))
+            if cost[bestk] >= cost[pchosen[f]]:
+                bestk = int(pchosen[f])
+            if bestk != pchosen[f]:
+                improved = True
+            pchosen[f] = bestk
+            np.add.at(loads, candP[f, bestk], 1)
+            loads[SEN] = 0
+            if loads[:SEN].max() < loads[hot]:
+                break
+        lm_now = int(loads[:SEN].max())
+        if lm_now < best_walk:
+            best_walk, stall = lm_now, 0
+        else:
+            stall += 1
+        if not improved or stall >= 3:
+            break
+    return loads, pchosen
+
+
 def _select_sharded(at: ATResult, K: int = 8, seed: int = 0,
                     dead_channels: Optional[set] = None,
                     local_search_rounds: int = 3, block: int = 512,
@@ -1785,7 +1983,11 @@ def _select_sharded(at: ATResult, K: int = 8, seed: int = 0,
                     refine_cap: Optional[int] = None, damp: float = 1.0,
                     hot_load_frac: float = 0.97,
                     refine_iters: int = 2,
-                    refine_block: int = 192) -> RoutingResult:
+                    refine_block: int = 192,
+                    uniq_dp="auto",
+                    dist_out: Optional[np.ndarray] = None,
+                    best_out: Optional[np.ndarray] = None
+                    ) -> RoutingResult:
     """Streaming per-source-shard path selection (the large-pod engine).
 
     The whole-array engine materialises every flow's candidates at once
@@ -1838,6 +2040,15 @@ def _select_sharded(at: ATResult, K: int = 8, seed: int = 0,
     stats: dict = {"engine": "sharded", "rounds": rounds,
                    "shard_sources": shard_sources, "k_min": k_min}
     ar = np.arange
+    if uniq_dp == "auto":
+        # the kcap=1 uniq-flow DP pays off on faulted/irregular fabrics
+        # (broken symmetry leaves many single-shortest-path flows) and
+        # on small pods where its cost is trivial; on large healthy
+        # tori it costs far more than the walk time it saves (101.6s
+        # at 16^3 -- ROADMAP PR 6 note)
+        has_dead = dead_channels is not None and len(dead_channels) > 0
+        uniq_dp = bool(has_dead or n <= 512)
+    stats["uniq_dp"] = bool(uniq_dp)
 
     # ---- phase 0: per-shard BFS + CSR skeleton ---------------------------
     t0 = time.time()
@@ -1858,16 +2069,23 @@ def _select_sharded(at: ATResult, K: int = 8, seed: int = 0,
         srcs = np.arange(s0, min(s0 + shard_sources, n))
         dist = state_bfs(at, srcs, dead_channels)
         best = node_distances(at, srcs, dist=dist)
+        if dist_out is not None:
+            dist_out[srcs] = dist.astype(dist_out.dtype)
+        if best_out is not None:
+            best_out[srcs] = best.astype(best_out.dtype)
         unreachable += int((best < 0).sum())
         fb, fd = np.nonzero(best > 0)
         flen = best[fb, fd].astype(np.int64)
         if len(flen) and int(flen.max()) > MAXHOP:
             raise ValueError(f"shortest path of {int(flen.max())} hops "
                              f"exceeds MAXHOP={MAXHOP}")
-        t1 = time.time()
-        uniq = _unique_channel_flows(sg, dist, best, n)[fb, fd]
-        t_nsp += time.time() - t1
-        uniq_flows += int(uniq.sum())
+        if uniq_dp:
+            t1 = time.time()
+            uniq = _unique_channel_flows(sg, dist, best, n)[fb, fd]
+            t_nsp += time.time() - t1
+            uniq_flows += int(uniq.sum())
+        else:
+            uniq = np.zeros(len(fb), bool)
         shard_dist.append(dist)
         shard_best.append(best.astype(np.int16))
         shard_fb.append(fb.astype(np.int64))
@@ -2036,107 +2254,9 @@ def _select_sharded(at: ATResult, K: int = 8, seed: int = 0,
             P = len(pool)
             pchosen = chosen_k[pool].astype(np.int64)
             old_pchosen = pchosen.copy()
-            snap = (loads.copy(), pchosen.copy(), lm_before)
-            # exact own-load-removal local search over the pool (small
-            # blocks: concurrent same-block moves collide on the same
-            # cold channels, and the churn costs ~5% l_max at 1024)
-            for _ in range(local_search_rounds):
-                changed = 0
-                for i in range(0, P, refine_block):
-                    b = slice(i, min(i + refine_block, P))
-                    B2 = b.stop - b.start
-                    bc = candP[b]
-                    cur = bc[ar(B2), pchosen[b]]
-                    ladj = loads[bc] - (bc[:, :, :, None]
-                                        == cur[:, None, None, :]).sum(axis=3)
-                    ladj = np.where(bc == SEN, 0, ladj)
-                    cost = ladj.max(axis=2) * np.int64(BIGF) \
-                        + ladj.sum(axis=2)
-                    cost[~kvP[b]] = np.iinfo(np.int64).max
-                    newc = cost.argmin(axis=1)
-                    better = cost[ar(B2), newc] < cost[ar(B2), pchosen[b]]
-                    mv = np.nonzero(better)[0]
-                    if len(mv):
-                        np.add.at(loads, cur[mv].ravel(), -1)
-                        np.add.at(loads, bc[mv, newc[mv]].ravel(), 1)
-                        loads[SEN] = 0
-                        pchosen[i + mv] = newc[mv]
-                        changed += len(mv)
-                lm_now = int(loads[:SEN].max())
-                if lm_now < snap[2]:
-                    snap = (loads.copy(), pchosen.copy(), lm_now)
-                if changed == 0:
-                    break
-            # safe hot-set peel (single moves can never mint a new max)
-            stall = 0
-            for _ in range(64):
-                lm = int(loads[:SEN].max())
-                if lm <= 1:
-                    break
-                hot_mask = np.zeros(SEN + 1, bool)
-                hot_mask[:SEN][loads[:SEN] == lm] = True
-                sel = candP[ar(P), pchosen]
-                hf = np.nonzero(hot_mask[sel].any(axis=1))[0]
-                if not len(hf):
-                    break
-                bc = candP[hf]
-                cur = sel[hf]
-                ladj = loads[bc] - (bc[:, :, :, None]
-                                    == cur[:, None, None, :]).sum(axis=3)
-                ladj = np.where(bc == SEN, 0, ladj)
-                safe = (ladj <= lm - 2).all(axis=2) & kvP[hf]
-                cost = ladj.max(axis=2) * np.int64(BIGF) + ladj.sum(axis=2)
-                cost[~safe] = np.iinfo(np.int64).max
-                newc = cost.argmin(axis=1)
-                mv = np.nonzero(safe[ar(len(hf)), newc])[0]
-                if len(mv) == 0:
-                    break
-                np.add.at(loads, cur[mv].ravel(), -1)
-                np.add.at(loads, bc[mv, newc[mv]].ravel(), 1)
-                loads[SEN] = 0
-                pchosen[hf[mv]] = newc[mv]
-                lm_now = loads[:SEN].max()
-                if lm_now < snap[2]:
-                    snap = (loads.copy(), pchosen.copy(), int(lm_now))
-                    stall = 0
-                else:
-                    stall += 1
-                    if stall >= 4:
-                        break
-            if snap[2] < loads[:SEN].max():
-                loads, pchosen = snap[0].copy(), snap[1].copy()
-            # short sequential hot-channel walk (exact reference rule)
-            stall = 0
-            best_walk = int(loads[:SEN].max())
-            for _ in range(8):
-                improved = False
-                hot = int(np.argmax(loads[:SEN]))
-                hot_flows = np.nonzero(
-                    (candP[ar(P), pchosen] == hot).any(axis=1))[0]
-                rng.shuffle(hot_flows)
-                for f in hot_flows[:4096]:
-                    np.add.at(loads, candP[f, pchosen[f]], -1)
-                    loads[SEN] = 0
-                    l = loads[candP[f]]
-                    cost = l.max(axis=1) * np.int64(BIGF) + l.sum(axis=1)
-                    cost = np.where(kvP[f], cost, np.iinfo(np.int64).max)
-                    bestk = int(np.argmin(cost))
-                    if cost[bestk] >= cost[pchosen[f]]:
-                        bestk = int(pchosen[f])
-                    if bestk != pchosen[f]:
-                        improved = True
-                    pchosen[f] = bestk
-                    np.add.at(loads, candP[f, bestk], 1)
-                    loads[SEN] = 0
-                    if loads[:SEN].max() < loads[hot]:
-                        break
-                lm_now = int(loads[:SEN].max())
-                if lm_now < best_walk:
-                    best_walk, stall = lm_now, 0
-                else:
-                    stall += 1
-                if not improved or stall >= 3:
-                    break
+            loads, pchosen = _refine_candidates(
+                loads, candP, kvP, pchosen, rng, SEN, np.int64(BIGF),
+                local_search_rounds, refine_block, lm_before)
             # write the moved flows back into the CSR arrays
             moved = np.nonzero(pchosen != old_pchosen)[0]
             stats["refine_moved"] += len(moved)

@@ -213,6 +213,40 @@ def allocate_vcs(at: ATResult, table: Union[PathTable, CSRPathTable],
     return counts
 
 
+def reallocate_vcs(at: ATResult, table: CSRPathTable, flows: np.ndarray,
+                   counts: np.ndarray, block: Optional[int] = None,
+                   stats: Optional[dict] = None) -> np.ndarray:
+    """Streamed VC re-allocation for an arbitrary flow subset.
+
+    The fault-repair pipeline re-routes only the flows whose paths
+    crossed dead channels; their old VC hops are stale (new channel
+    sequences) while every untouched flow's assignment remains valid
+    against the pruned allowed set (pruning only removes turns, never
+    changes surviving ones). This re-runs the exact-lookahead assignment
+    over just those ``flows`` -- the caller must already have subtracted
+    their old hops from ``counts`` (the live hops-per-VC vector) so the
+    balanced priority derivation sees the true background. ``counts`` is
+    updated in place and returned.
+    """
+    flows = np.asarray(flows, np.int64)
+    n_vc = at.n_vc
+    F = len(flows)
+    if F == 0:
+        return counts
+    if block is None:
+        block = max(64, F // 64)
+    for i in range(0, F, block):
+        sub = flows[i:min(i + block, F)]
+        P, _, lens = table.gather_paths(sub)
+        pr = int(np.argmin(counts))
+        vorder = [pr] + [v for v in range(n_vc) if v != pr]
+        V = _lookahead_vcs(at, P, lens, vorder, stats=stats)
+        live = np.arange(P.shape[1])[None, :] < lens[:, None]
+        table.set_flow_vcs(sub, V, lens)
+        counts += np.bincount(V[live], minlength=n_vc)
+    return counts
+
+
 def verify_deadlock_free(at: ATResult,
                          table: Union[PathTable, CSRPathTable]) -> bool:
     """Invariant check: every consecutive (channel, vc) hop of every routed

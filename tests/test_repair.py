@@ -1,0 +1,252 @@
+"""Equivalence suite for the incremental fault-repair pipeline
+(`repro.core.repair`): the repaired state must be reachability- and
+deadlock-equivalent to a full recompute on the faulted fabric, repaired
+paths must avoid every dead channel, untouched flows must stay
+byte-identical, and repair quality (post-repair l_max) must stay within
+1.10x of the full-recompute oracle. Also covers the delta-admission
+exactness (readmitted set stays acyclic), repair-after-repair chains,
+and the full-recompute fallback on genuine disconnection."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from scipy.sparse.csgraph import connected_components
+
+from repro.core import fault as F, routing as R, topology as T, \
+    vcalloc as V
+from repro.core.repair import (ServingState, _pruned_at, _readmit,
+                               full_recompute, repair_fault)
+
+L_MAX_BOUND = 1.10
+
+
+@pytest.fixture(scope="module")
+def served():
+    topo = T.pdtt((4, 4, 4))
+    state = ServingState.build(topo, n_vc=4, K=8, seed=0, robust=True)
+    return topo, state
+
+
+def _dead_mask(state, dead):
+    m = np.zeros(state.at.channels.n, bool)
+    m[np.asarray(dead, np.int64)] = True
+    return m
+
+
+# ---------------------------------------------------------------------------
+# single-OCS repair: the headline contract
+# ---------------------------------------------------------------------------
+
+
+def test_single_ocs_repair_full_contract(served):
+    topo, st = served
+    color = F.colors_in_use(topo)[0]
+    dead = F.dead_channels_for_color(st.at, color)
+    rr = repair_fault(st, dead, verify="full")
+    assert rr.flows_rerouted > 0
+    assert rr.unreachable == 0
+    assert rr.deadlock_free
+    assert not rr.fallback
+    new = rr.state.table
+    # every repaired path avoids every dead channel
+    assert not _dead_mask(st, dead)[new.chan].any()
+    # still one flow per (s, d) pair at full reachability
+    assert new.n_routed() == topo.n * (topo.n - 1)
+    # the carried load / VC-count vectors match the table exactly
+    np.testing.assert_array_equal(rr.state.loads[:-1],
+                                  new.loads().astype(np.int64))
+    np.testing.assert_array_equal(rr.state.vc_counts,
+                                  new.vc_hop_counts())
+    # full deadlock-freedom check over the repaired state graph
+    assert V.verify_deadlock_free(rr.state.at, new)
+    # quality: within the bound of the full-recompute oracle
+    routed, _, _ = full_recompute(st, dead)
+    assert routed.unreachable == 0
+    assert rr.l_max <= routed.l_max * L_MAX_BOUND, (rr.l_max, routed.l_max)
+    # the input state was not mutated
+    assert len(st.dead) == 0
+    np.testing.assert_array_equal(st.loads[:-1],
+                                  st.table.loads().astype(np.int64))
+
+
+def test_untouched_flows_bit_identical(served):
+    topo, st = served
+    color = F.colors_in_use(topo)[1]
+    dead = F.dead_channels_for_color(st.at, color)
+    rr = repair_fault(st, dead)
+    old, new = st.table, rr.state.table
+    F_ = old.n_flows
+    foh = np.repeat(np.arange(F_), old.flow_len)
+    pool = np.unique(foh[_dead_mask(st, dead)[old.chan]])
+    untouched = np.setdiff1d(np.arange(F_), pool)
+    assert len(pool) == rr.flows_rerouted
+    P1, V1, L1 = old.gather_paths(untouched)
+    P2, V2, L2 = new.gather_paths(untouched)
+    W = max(P1.shape[1], P2.shape[1])
+    np.testing.assert_array_equal(L1, L2)
+    np.testing.assert_array_equal(P1, P2[:, :P1.shape[1]])
+    np.testing.assert_array_equal(V1, V2[:, :V1.shape[1]])
+    del W
+
+
+def test_reachability_equivalent_to_fresh_at_on_faulted_topology(served):
+    topo, st = served
+    color = F.colors_in_use(topo)[0]
+    dead = F.dead_channels_for_color(st.at, color)
+    rr = repair_fault(st, dead)
+    # fresh cold build on the faulted fabric (channel ids differ; node
+    # reachability is the invariant)
+    faulted = T.Topology(topo.pod,
+                         [e for e in topo.optical if e[2] != color])
+    fresh = R.allowed_turns(faulted, n_vc=4, robust=True, seed=0)
+    srcs = np.arange(topo.n)
+    best_fresh = R.node_distances(fresh, srcs)
+    best_rep = R.node_distances(rr.state.at, srcs, dead_channels=dead)
+    np.testing.assert_array_equal(best_rep >= 0, best_fresh >= 0)
+    # robust AT: the faulted fabric stays fully reachable both ways
+    assert (best_fresh >= 0).all()
+
+
+def test_pruned_allowed_set_drops_exactly_dead_turns(served):
+    topo, st = served
+    color = F.colors_in_use(topo)[2]
+    dead = F.dead_channels_for_color(st.at, color)
+    dm = _dead_mask(st, dead)
+    at2 = _pruned_at(st.at, dm)
+    n_vc = st.at.n_vc
+    e_old = st.at._edges
+    e_new = at2._edges
+    dead_edge = dm[e_old[:, 0] // n_vc] | dm[e_old[:, 1] // n_vc]
+    # pruning keeps exactly the surviving edges, in canonical content
+    keys_old = set(map(tuple, e_old[~dead_edge].tolist()))
+    keys_new = set(map(tuple, e_new.tolist()))
+    assert keys_old == keys_new
+    # and the lazy allowed view matches the reference representation
+    sub = {k for k in st.at.allowed
+           if not (dm[k[0][0]] or dm[k[1][0]])}
+    assert set(at2.allowed) == sub
+
+
+def test_readmitted_set_stays_acyclic_and_dead_free(served):
+    topo, st = served
+    ch = st.at.channels
+    rng = np.random.default_rng(0)
+    pick = rng.choice(np.nonzero(ch.color < 0)[0], size=40, replace=False)
+    dead = np.unique(np.concatenate([pick, ch.rev[pick]]))
+    dm = _dead_mask(st, dead)
+    at2 = _pruned_at(st.at, dm)
+    n = _readmit(at2)
+    assert n > 0, "heavy electrical pruning should leave room to readmit"
+    e = at2._edges
+    n_vc = st.at.n_vc
+    assert not (dm[e[:, 0] // n_vc] | dm[e[:, 1] // n_vc]).any()
+    S = ch.n * n_vc
+    m = sp.csr_matrix((np.ones(len(e), np.int8), (e[:, 0], e[:, 1])),
+                      shape=(S, S))
+    _, labels = connected_components(m, directed=True, connection="strong")
+    assert np.bincount(labels).max() == 1, \
+        "readmitted allowed set must stay a DAG"
+
+
+# ---------------------------------------------------------------------------
+# repair after repair, fallback, no-op
+# ---------------------------------------------------------------------------
+
+
+def test_multi_fault_sequence_repair_after_repair(served):
+    topo, st = served
+    cur = st
+    killed: list = []
+    for color in F.colors_in_use(topo)[:3]:
+        dead = F.dead_channels_for_color(cur.at, color)
+        rr = repair_fault(cur, dead, verify="full")
+        killed.extend(np.asarray(dead).tolist())
+        assert rr.unreachable == 0
+        assert rr.deadlock_free
+        cur = rr.state
+        np.testing.assert_array_equal(cur.dead, np.unique(killed))
+        dm = np.zeros(cur.at.channels.n, bool)
+        dm[cur.dead] = True
+        assert not dm[cur.table.chan].any()
+        assert V.verify_deadlock_free(cur.at, cur.table)
+        np.testing.assert_array_equal(cur.loads[:-1],
+                                      cur.table.loads().astype(np.int64))
+        np.testing.assert_array_equal(cur.vc_counts,
+                                      cur.table.vc_hop_counts())
+
+
+def test_fallback_full_recompute_on_disconnection(served):
+    topo, st = served
+    ch = st.at.channels
+    dead = np.nonzero((ch.src == 0) | (ch.dst == 0))[0].astype(np.int64)
+    rr = repair_fault(st, dead, verify="full")
+    assert rr.fallback
+    # node 0 is gone: exactly its flows are unreachable
+    assert rr.unreachable == 2 * (topo.n - 1)
+    assert rr.deadlock_free
+    assert not _dead_mask(st, dead)[rr.state.table.chan].any()
+
+
+def test_noop_repair_on_empty_fault(served):
+    topo, st = served
+    rr = repair_fault(st, np.zeros(0, np.int64))
+    assert rr.flows_rerouted == 0
+    assert rr.unreachable == 0
+    assert rr.deadlock_free
+    np.testing.assert_array_equal(rr.state.table.chan, st.table.chan)
+    np.testing.assert_array_equal(rr.state.loads, st.loads)
+
+
+# ---------------------------------------------------------------------------
+# fault.py integration
+# ---------------------------------------------------------------------------
+
+
+def test_dead_channels_for_color_is_sorted_array_and_cached(served):
+    topo, st = served
+    ch = st.at.channels
+    for color in F.colors_in_use(topo)[:4]:
+        dead = F.dead_channels_for_color(st.at, color)
+        assert isinstance(dead, np.ndarray) and dead.dtype == np.int64
+        assert (np.diff(dead) > 0).all()
+        np.testing.assert_array_equal(
+            dead, np.nonzero(ch.color == color)[0])
+    assert "_color_csr" in ch.__dict__
+
+
+def test_fault_sweep_repair_mode(served):
+    topo, st = served
+    sweep = F.fault_sweep(topo, st.at, repair_from=st)
+    assert len(sweep) == len(F.colors_in_use(topo))
+    for entry in sweep:
+        assert entry.repair is not None
+        assert entry.connected
+        assert entry.repair.unreachable == 0
+        assert entry.repair.deadlock_free
+        dead = F.dead_channels_for_color(st.at, entry.color)
+        assert not _dead_mask(st, dead)[entry.routed.table.chan].any()
+        assert entry.routed.l_max == entry.repair.l_max
+
+
+# ---------------------------------------------------------------------------
+# 12^3 smoke (opt-in)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.huge
+@pytest.mark.slow          # the fast lane's -m "not slow" overrides the
+def test_12cube_single_ocs_repair_smoke():          # "not huge" addopts
+    """12^3 time-to-recover smoke (``pytest -m huge``): one OCS dies
+    under a live 1728-chip serving state; the incremental repair must
+    restore full reachability deadlock-free, avoid the dead channels,
+    and stay within the quality bound of a full recompute."""
+    topo = T.pdtt((12, 12, 12))
+    st = ServingState.build(topo, n_vc=2, K=4, seed=0, robust=True)
+    color = F.colors_in_use(topo)[0]
+    dead = F.dead_channels_for_color(st.at, color)
+    rr = repair_fault(st, dead, verify="full")
+    assert rr.unreachable == 0
+    assert rr.deadlock_free
+    assert not rr.fallback
+    assert not _dead_mask(st, dead)[rr.state.table.chan].any()
+    routed, _, _ = full_recompute(st, dead)
+    assert rr.l_max <= routed.l_max * L_MAX_BOUND

@@ -87,10 +87,24 @@ def test_sharded_stats_surface_stage_split_and_counters(pod_routed):
         assert k in sh.stats
     # the kcap=1 fast lane must actually fire on these pods: a healthy
     # fraction of flows is channel-path-unique even on symmetric tori
+    assert sh.stats["uniq_dp"] is True      # auto heuristic: n <= 512
     assert sh.stats["uniq_flows"] > 0
     for k in ("enumerate_s", "greedy_s", "local_search_s", "hot_peel_s",
               "hot_walk_s"):
         assert k in arr.stats
+
+
+def test_uniq_dp_gate_off_still_routes_and_records_decision(pod_routed):
+    topo, at, _, sh = pod_routed
+    off = R.select_paths(at, K=4, local_search_rounds=1, engine="sharded",
+                         uniq_dp=False)
+    assert off.stats["uniq_dp"] is False
+    assert off.stats["uniq_flows"] == 0
+    assert off.stats["uniq_s"] == 0.0
+    assert off.unreachable == sh.unreachable == 0
+    assert V.verify_deadlock_free(at, off.table)
+    # the DP is a perf fast lane, not a quality lever
+    assert off.l_max <= sh.l_max * 1.05 and sh.l_max <= off.l_max * 1.05
 
 
 def test_unique_channel_flows_matches_brute_force_enumeration():
