@@ -44,6 +44,7 @@ GUARD_SPEC = (8, 8, 8)          # 512 chips: the guarded CSR section
 FULL_SPEC = (12, 12, 12)        # 1728 chips: --full saturation entry
 SWEEP_REGRESSION = 1.5          # 8^3 batched-sweep wall-clock guard
 BYTES_REGRESSION = 1.15         # 8^3 staged-array-bytes guard (deterministic)
+ADAPTIVE_OFF_REGRESSION = 1.10  # adaptive-off path vs pre-adaptive baseline
 
 
 # ---------------------------------------------------------------------------
@@ -307,6 +308,51 @@ def main(full: bool = False, json_path=None) -> dict:
                          n512["csr_array_bytes"],
                          prior512.get("csr_array_bytes"),
                          BYTES_REGRESSION)
+        # the adaptive features ride the same kernel behind python-static
+        # flags: with adaptive off the staged trace is unchanged, so the
+        # wall-clock must stay within 1.10x of the pre-adaptive baseline
+        # (tighter than the general 1.5x sweep guard)
+        guard_regression("netsim_n512_adaptive_off_overhead",
+                         n512["sweep_s"], prior512.get("sweep_s"),
+                         ADAPTIVE_OFF_REGRESSION)
+
+    # ---- adaptive-routing lane (8^3, hotspot) ------------------------
+    from repro.core import routing as R
+
+    at8 = R.allowed_turns(topo8, n_vc=4, priority="robust")
+    sel8 = R.select_paths(at8, K=4, local_search_rounds=1,
+                          engine="sharded")
+    atab8 = NS.at_tables(topo8, at8, sel8, reserve_escape=True)
+    spec8 = NS.adaptive_spec(topo8)
+    # 8 hot endpoints at frac 0.4: consumption-limited sat ~= 0.039, so
+    # a 0.005 step resolves the static-vs-adaptive gap (one hot node
+    # saturates below any usable grid at n=512)
+    hot8 = TrafficPattern.hotspot(topo8.n, list(range(8)), 0.4)
+    t0 = time.time()
+    sat_s8, _ = NS.saturation_point(atab8, step=0.005, max_rate=0.08,
+                                    cycles=1500, warmup=500,
+                                    traffic=hot8)
+    t_stat8 = time.time() - t0
+    t0 = time.time()
+    sat_a8, _ = NS.saturation_point(atab8, step=0.005, max_rate=0.08,
+                                    cycles=1500, warmup=500,
+                                    traffic=hot8, adaptive=spec8)
+    t_adapt8 = time.time() - t0
+    n512["adaptive"] = {
+        "hotspot_sat_static": round(sat_s8, 5),
+        "hotspot_sat_adaptive": round(sat_a8, 5),
+        "sat_static_s": round(t_stat8, 4),
+        "sat_adaptive_s": round(t_adapt8, 4),
+    }
+    print(f"  n512 adaptive: hotspot sat static={sat_s8:.4f} "
+          f"adaptive={sat_a8:.4f} ({t_stat8:.1f}s/{t_adapt8:.1f}s)")
+    emit("bench_netsim_n512_adaptive_hotspot_sat", 0,
+         f"static={sat_s8:.4f} adaptive={sat_a8:.4f}")
+    if json_path:
+        # within-run quality guard: adaptive saturation collapsing below
+        # static under hotspot means the escape/overflow policy broke
+        guard_regression("netsim_n512_adaptive_hotspot_sat", sat_a8,
+                         sat_s8, 1.0, larger_is_worse=False)
 
     # ---- 12^3 saturation entry (--full; record kept across runs) -----
     if full:

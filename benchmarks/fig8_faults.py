@@ -107,6 +107,27 @@ def main(full: bool = False) -> None:
                       for c, ((u, fcv), (ru, rfc)) in sims.items()))
             print(f"        sim kernel={sstats.get('kernel')} peak array "
                   f"bytes {sstats.get('array_bytes', 0):,}")
+        # mid-sweep fault: the OCS dies at cycle t *while packets are in
+        # flight* -- no chance to preload fault-specific tables. Static
+        # tables strand every packet whose frozen path died; the
+        # adaptive escape-VC kernel re-resolves them onto surviving
+        # alternates or the re-rooted escape tree, conserving both ways.
+        color0 = sim_colors[0]
+        ev = F.fault_event(at, color0, 800)
+        atab = NS.at_tables(topo, at, base, reserve_escape=True)
+        aspec = NS.adaptive_spec(topo, dead_channels=ev[1])
+        stt = NS.sweep(atab, [0.1], cycles=2000, warmup=800,
+                       fault=ev)[0]
+        adt = NS.sweep(atab, [0.1], cycles=2000, warmup=800, fault=ev,
+                       adaptive=aspec)[0]
+        print(f"        mid-sweep fault c{color0}@800: stranded "
+              f"in-flight static={stt['in_flight']} "
+              f"adaptive={adt['in_flight']} "
+              f"(escaped={adt['escaped']}, watchdog "
+              f"{'quiet' if adt['stalled_at'] < 0 else 'FIRED'})")
+        emit(f"fig8_{name.lower()}_midsweep", 0,
+             f"static_stranded={stt['in_flight']} "
+             f"adaptive_stranded={adt['in_flight']}")
         emit(f"fig8_{name.lower()}", 0,
              f"worst_fault_frac={base.l_max / lmaxes.max():.3f}")
         emit(f"fig8_{name.lower()}_repair", t_repair * 1e6,

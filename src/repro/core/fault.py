@@ -54,6 +54,18 @@ def fault_region_nodes(at: ATResult, color: int) -> np.ndarray:
     return np.unique(np.concatenate([ch.src[dead], ch.dst[dead]]))
 
 
+def fault_event(at: ATResult, color: int,
+                t: int) -> Tuple[int, np.ndarray]:
+    """A mid-sweep OCS failure as the ``fault=(t, dead_channels)`` pair
+    :func:`repro.core.netsim.sweep` consumes: OCS ``color`` dies at
+    cycle ``t``, killing every optical link routed through it. ``t``
+    must be non-negative (range against the sweep's cycle budget is
+    checked by the simulator, which knows it)."""
+    if t < 0:
+        raise ValueError(f"fault cycle must be >= 0, got {t}")
+    return int(t), dead_channels_for_color(at, color)
+
+
 def fault_tolerance_certificate(topo: Topology, lam: float, f: int = 1
                                 ) -> Dict[str, float]:
     """Appendix D: t_max <= min(floor(32 n lambda), 48)."""

@@ -54,7 +54,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.pathtable import MAXHOP, CSRPathTable, PathTable
-from repro.core.routing import ATResult, Channels, RoutingResult
+from repro.core.routing import (ATResult, Channels, RoutingResult,
+                                _dead_channel_array)
 from repro.core.topology import Topology
 from repro.core.traffic import (CompiledFlowTraffic, CompiledTraffic,
                                 TrafficPattern, compile_flow_traffic)
@@ -164,10 +165,14 @@ def _pack_flow(flow, hop, tag):
 
 
 @partial(jax.jit, static_argnames=("R", "n", "n_ch", "n_vc", "slots",
-                                   "cycles", "warmup", "flits"))
-def _sweep_csr(ch_dst, pvf, hptr, lenm1, src_ptr, deg, fprob, falias,
-               src_rate, rates, key, *, R, n, n_ch, n_vc, slots, cycles,
-               warmup, flits):
+                                   "cycles", "warmup", "flits", "adaptive",
+                                   "faulted", "bursty", "patience",
+                                   "watchdog", "D", "period", "on_cycles"))
+def _sweep_csr(ch_dst, pvf, hptr, lenm1, dstN, src_ptr, deg, fprob, falias,
+               src_rate, rates, key, outch, minmask, esc, alive, t_fault,
+               g_on, g_off, phase, *, R, n, n_ch, n_vc, slots, cycles,
+               warmup, flits, adaptive=False, faulted=False, bursty=False,
+               patience=64, watchdog=512, D=1, period=0, on_cycles=0):
     """R independent simulations (one per injection rate) in one compiled
     execution, gathering routes from the CSR hop arrays.
 
@@ -183,6 +188,29 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, src_ptr, deg, fprob, falias,
     ``pvf[hptr[flow] + hop + 1]`` and it consumes when ``hop`` reaches
     ``lenm1[flow]`` -- no (n, n, MAXHOP) arrays anywhere. ``pvf`` packs
     ``channel * n_vc + vc`` per hop (one gather serves both fields).
+
+    Extension flags (all python-static, so the default trace -- and its
+    counters -- is bit-identical to the plain static kernel):
+
+    - ``adaptive``: heads on VCs >= 1 pick among the minimal alternates
+      of ``outch``/``minmask`` by downstream adaptive-VC free space and
+      divert to the escape lane (VC 0, routed by ``esc``) after
+      ``patience`` stalled cycles or when no live alternate exists;
+      VC 0 heads always follow the escape tree. ``dstN`` maps flow ->
+      destination node (consumption becomes node-arrival, not
+      hop-count).
+    - ``faulted``: channels with ``alive[1, c] == 0`` stop accepting
+      forwards/injections from cycle ``t_fault`` on (their queues still
+      drain -- the buffer sits at the receiving node); tables indexed
+      ``[ph]`` switch from the pre- to the post-fault plane.
+    - ``bursty``: injection thresholds are modulated by the
+      mean-preserving on/off gains (``g_on``/``g_off``) on a
+      ``period``-cycle schedule offset per source by ``phase``.
+    - watchdog (always on): a lane with packets in flight that neither
+      pops nor injects for ``watchdog`` consecutive cycles is marked
+      stalled (``stalled_at`` = cycle of detection); when *every* lane
+      is stalled the sweep aborts early instead of spinning out the
+      budget.
     """
     C = R * n_ch                    # flat channels across lanes
     NQ = C * n_vc                   # flat queues across lanes
@@ -199,10 +227,19 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, src_ptr, deg, fprob, falias,
     srcs = jnp.tile(jnp.arange(n), R)            # local node ids per lane
     lane_q = (jnp.arange(N) // n) * (n_ch * n_vc)
     thresh = (rates[:, None] * src_rate[None, :]).reshape(N)
+    if bursty:
+        phs = jnp.tile(phase, R)                 # (N,) per-source offsets
+    if adaptive:
+        node_q = jnp.tile(ch_dst, R)[jnp.arange(NQ) // n_vc]
+        vc_q = jnp.arange(NQ) % n_vc
+        qrows = jnp.arange(NQ)
 
-    def cycle(i, carry):
-        q, head, size, rr, busy, key, stats = carry
-        offered, accepted, tagged, consumed_meas, consumed, injected = stats
+    def cycle(carry):
+        i, q, head, size, rr, busy, key, stall, wstall, stalled_at, \
+            stats = carry
+        offered, accepted, tagged, consumed_meas, consumed, injected, \
+            escaped = stats
+        ph = (i >= t_fault).astype(jnp.int32) if faulted else 0
 
         # ---- head packet per (lane, channel, vc) --------------------------
         hw = q[jnp.arange(NQ), head]
@@ -210,12 +247,81 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, src_ptr, deg, fprob, falias,
         hh = (hw >> _HOP_SHIFT) & _HOP_MASK
         nonempty = size > 0
 
-        consume_q = nonempty & (hh == lenm1[hf])
-        nxt = pvf[jnp.minimum(hptr[hf] + hh + 1, H - 1)]
         lane_base = (jnp.arange(NQ) // (n_ch * n_vc)) * (n_ch * n_vc)
-        tq = jnp.where(consume_q, -1, lane_base + nxt)
-        fwd_ok = nonempty & ~consume_q & (size[jnp.clip(tq, 0, NQ - 1)]
-                                          < slots)
+        if adaptive:
+            # consume on destination arrival; next hop chosen live among
+            # the minimal alternates by downstream adaptive free space,
+            # escape lane (VC0 over the tree) as the safe fallback
+            dq = dstN[hf]
+            consume_q = nonempty & (node_q == dq)
+            cand_ch = jnp.clip(outch[node_q], 0, n_ch - 1)     # (NQ, D)
+            mm = minmask[ph, node_q, dq]
+            ok_cand = ((mm[:, None] >> jnp.arange(D)[None, :]) & 1) > 0
+            if faulted:
+                ok_cand = ok_cand & (alive[ph, cand_ch] > 0)
+            # free space of the queue the packet would actually join:
+            # its destination-bound adaptive VC on each candidate channel
+            vq = (1 + dq % (n_vc - 1))[:, None]
+            occ = size[lane_base[:, None] + cand_ch * n_vc + vq]
+            score = jnp.where(ok_cand, slots - occ, -1)
+            # rotate tie-breaks per (queue, cycle): equal scores would
+            # otherwise herd every packet at a node onto one alternate
+            rot = (jnp.arange(D)[None, :] + qrows[:, None] + i) % D
+            j = jnp.argmax(score * D + rot, axis=1)
+            best_ch = cand_ch[qrows, j]
+            has_cand = score[qrows, j] >= 0
+            # destination-bound adaptive VC: confines any one endpoint's
+            # backlog to a single VC per channel, so victim flows keep
+            # the other adaptive VCs (least-occupied selection was
+            # measured to level-fill every VC with hotspot backlog and
+            # collapse total throughput well below the static tables)
+            bv = 1 + dq % (n_vc - 1)
+            # planned-path-first: a packet still on its static path keeps
+            # it while the destination-bound queue ahead has room -- the
+            # LP-balanced tables confine backlog to the same narrow cones
+            # static routing does -- and only overflows onto the freest
+            # minimal alternate (off-path and post-fault packets route
+            # fully adaptively)
+            my_ch = (qrows // n_vc) % n_ch
+            on_path = (hh <= lenm1[hf]) \
+                & (pvf[jnp.minimum(hptr[hf] + hh, H - 1)] // n_vc
+                   == my_ch)
+            chan_s = pvf[jnp.minimum(hptr[hf] + hh + 1, H - 1)] // n_vc
+            prim_occ = size[lane_base + chan_s * n_vc + bv]
+            best_occ = slots - score[qrows, j]    # slots + 1 when no cand
+            prim_take = on_path & ~consume_q & (prim_occ < slots) \
+                & (prim_occ <= best_occ + 4)
+            if faulted:
+                prim_take = prim_take & (alive[ph, chan_s] > 0)
+            use_esc = (vc_q == 0) | (stall >= patience) \
+                | (~has_cand & ~prim_take)
+            e_ch = esc[ph, node_q, dq]
+            nxt_ch = jnp.where(use_esc, e_ch,
+                               jnp.where(prim_take, chan_s, best_ch))
+            nxt_vc = jnp.where(use_esc, 0, bv)
+            valid = nxt_ch >= 0
+            if faulted:
+                valid = valid & (alive[ph, jnp.clip(nxt_ch, 0,
+                                                    n_ch - 1)] > 0)
+            tq = jnp.where(consume_q | ~valid, -1,
+                           lane_base
+                           + jnp.clip(nxt_ch, 0, n_ch - 1) * n_vc
+                           + nxt_vc)
+            fwd_ok = nonempty & ~consume_q & (tq >= 0) \
+                & (size[jnp.clip(tq, 0, NQ - 1)] < slots)
+        else:
+            consume_q = nonempty & (hh == lenm1[hf])
+            nxt = pvf[jnp.minimum(hptr[hf] + hh + 1, H - 1)]
+            tq = jnp.where(consume_q, -1, lane_base + nxt)
+            if faulted:
+                # dead next hop: the packet waits in place (and the
+                # watchdog eventually reports the wedged lane)
+                tq = jnp.where(alive[ph, nxt // n_vc] > 0, tq, -1)
+                fwd_ok = nonempty & ~consume_q & (tq >= 0) \
+                    & (size[jnp.clip(tq, 0, NQ - 1)] < slots)
+            else:
+                fwd_ok = nonempty & ~consume_q \
+                    & (size[jnp.clip(tq, 0, NQ - 1)] < slots)
         eligible = consume_q | fwd_ok                   # per (c, v)
 
         # ---- round-robin arbitration: one vc per channel ------------------
@@ -252,12 +358,24 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, src_ptr, deg, fprob, falias,
         # post-pop (head + size) equals pre-pop (head + size): a pop moves
         # head forward and shrinks size by one, so the tail slot is stable
         p_slot = (head[tgt] + size[tgt]) % slots
-        push_word = w_word + (1 << _HOP_SHIFT)      # hop += 1, rest intact
+        if adaptive:
+            # adaptive paths are not length-bounded by the route table, so
+            # saturate the 6-bit hop field instead of wrapping into the tag
+            w_hh = (w_word >> _HOP_SHIFT) & _HOP_MASK
+            push_word = jnp.where(w_hh >= _HOP_MASK, w_word,
+                                  w_word + (1 << _HOP_SHIFT))
+        else:
+            push_word = w_word + (1 << _HOP_SHIFT)  # hop += 1, rest intact
 
         # ---- injection: alias-sampled routed flow per source --------------
         measure = i >= warmup
         key, k1, k2, k3 = jax.random.split(key, 4)
-        want = jax.random.uniform(k1, (N,)) < thresh
+        if bursty:
+            on = ((i + phs) % period) < on_cycles
+            want = jax.random.uniform(k1, (N,)) \
+                < thresh * jnp.where(on, g_on, g_off)
+        else:
+            want = jax.random.uniform(k1, (N,)) < thresh
         u1 = jax.random.uniform(k2, (N,))
         dg = deg[srcs]
         j = jnp.minimum((u1 * dg.astype(jnp.float32)).astype(jnp.int32),
@@ -266,7 +384,25 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, src_ptr, deg, fprob, falias,
         u2 = jax.random.uniform(k3, (N,))
         fid = jnp.where(u2 < fprob[f0], f0, falias[f0])
         cv0 = pvf[hptr[fid]]
-        iq = lane_q + cv0
+        if adaptive or faulted:
+            ch0 = cv0 // n_vc
+            ok0 = (alive[ph, ch0] > 0) if faulted \
+                else jnp.ones((N,), bool)
+            if adaptive:
+                # the stored VC is a static-mode artifact: inject onto
+                # the planned channel's destination-bound adaptive VC
+                # (sources can always wait, so injection never needs the
+                # escape guarantee). Planned first hop dead: inject
+                # straight onto the escape tree; no escape route -> hold.
+                dstf = dstN[fid]
+                iv = 1 + dstf % (n_vc - 1)
+                e0 = esc[ph, srcs, dstf]
+                cv0 = jnp.where(ok0, ch0 * n_vc + iv,
+                                jnp.maximum(e0, 0) * n_vc)
+                ok0 = ok0 | (e0 >= 0)
+            iq = lane_q + cv0
+        else:
+            iq = lane_q + cv0
         # queue iq was popped this cycle iff its channel's winner is iq
         i_pop = (w_pop[iq // n_vc]
                  & (win_q[iq // n_vc] == iq)).astype(jnp.int32)
@@ -274,6 +410,8 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, src_ptr, deg, fprob, falias,
         i_push = (first[iq] < C).astype(jnp.int32)
         has_space = size[iq] - i_pop + i_push < slots
         inj = want & has_space & (dg > 0)
+        if adaptive or faulted:
+            inj = inj & ok0
         i_slot = (head[iq] + size[iq] + i_push) % slots
         inj_word = _pack_flow(fid, jnp.zeros((N,), jnp.int32),
                               measure & inj)
@@ -295,37 +433,72 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, src_ptr, deg, fprob, falias,
 
         meas = jnp.where(measure, 1, 0)
         cons_lane = w_consume.reshape(R, n_ch).sum(axis=1)
+        inj_lane = inj.reshape(R, n).sum(axis=1)
         offered = offered + meas * want.reshape(R, n).sum(axis=1)
-        accepted = accepted + meas * inj.reshape(R, n).sum(axis=1)
+        accepted = accepted + meas * inj_lane
         tagged = tagged + (w_consume & (w_tag == 1)).reshape(
             R, n_ch).sum(axis=1)
         consumed_meas = consumed_meas + meas * cons_lane
         consumed = consumed + cons_lane
-        injected = injected + inj.reshape(R, n).sum(axis=1)
-        return (q, head, size, rr, busy, key,
-                (offered, accepted, tagged, consumed_meas, consumed,
-                 injected))
+        injected = injected + inj_lane
 
-    stats0 = (jnp.zeros((R,), jnp.int32),) * 6
-    carry = (q, head, size, rr, busy, key, stats0)
-    carry = jax.lax.fori_loop(0, cycles, cycle, carry)
-    size = carry[2]
-    offered, accepted, tagged, consumed_meas, consumed, injected = carry[-1]
+        if adaptive:
+            # per-queue persistent-stall counter (drives escape diversion)
+            popped = w_pop[qrows // n_vc] & (win_q[qrows // n_vc] == qrows)
+            stall = jnp.where(nonempty & ~popped, stall + 1, 0)
+            # escape diversions: pushes that land on VC0 from a VC >= 1
+            escaped = escaped + (w_push & (tgt % n_vc == 0)
+                                 & (win_q % n_vc != 0)).reshape(
+                R, n_ch).sum(axis=1)
+
+        # ---- watchdog: lanes with traffic but zero forward progress -------
+        pop_lane = w_pop.reshape(R, n_ch).sum(axis=1)
+        progress = (pop_lane > 0) | (inj_lane > 0)
+        wstall = jnp.where((injected - consumed > 0) & ~progress,
+                           wstall + 1, 0)
+        stalled_at = jnp.where((wstall >= watchdog) & (stalled_at < 0),
+                               i, stalled_at)
+        return (i + 1, q, head, size, rr, busy, key, stall, wstall,
+                stalled_at,
+                (offered, accepted, tagged, consumed_meas, consumed,
+                 injected, escaped))
+
+    stats0 = (jnp.zeros((R,), jnp.int32),) * 7
+    stall0 = jnp.zeros((NQ if adaptive else 1,), jnp.int32)
+    carry = (jnp.int32(0), q, head, size, rr, busy, key, stall0,
+             jnp.zeros((R,), jnp.int32), jnp.full((R,), -1, jnp.int32),
+             stats0)
+
+    def cond(carry):
+        return (carry[0] < cycles) & ~jnp.all(carry[8] >= watchdog)
+
+    carry = jax.lax.while_loop(cond, cycle, carry)
+    size = carry[3]
+    stalled_at = carry[9]
+    offered, accepted, tagged, consumed_meas, consumed, injected, \
+        escaped = carry[-1]
     return (offered, accepted, tagged, consumed_meas, consumed, injected,
-            size.reshape(R, -1).sum(axis=1))
+            escaped, size.reshape(R, -1).sum(axis=1), stalled_at, carry[0])
 
 
 @partial(jax.jit, static_argnames=("R", "n", "n_ch", "n_vc", "slots",
-                                   "cycles", "warmup", "flits"))
+                                   "cycles", "warmup", "flits", "adaptive",
+                                   "faulted", "bursty", "patience",
+                                   "watchdog", "D", "period", "on_cycles"))
 def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
-                 src_rate, rates, key, *, R, n, n_ch, n_vc, slots, cycles,
-                 warmup, flits):
+                 src_rate, rates, key, outch, minmask, esc, alive, t_fault,
+                 g_on, g_off, phase, *, R, n, n_ch, n_vc, slots, cycles,
+                 warmup, flits, adaptive=False, faulted=False, bursty=False,
+                 patience=64, watchdog=512, D=1, period=0, on_cycles=0):
     """Legacy dense-gather kernel: identical cycle body to
     :func:`_sweep_csr` (same RNG stream, same flow-slot sampling, same
     arbitration) except route lookups gather from the dense
     ``(n, n, MAXHOP)`` composite table and packet words carry (src, dst)
     node ids. Kept as the bit-identity oracle for the CSR kernel -- edit
-    the two cycle bodies in lockstep.
+    the two cycle bodies in lockstep. The adaptive/faulted/bursty flags
+    and the always-on watchdog mirror :func:`_sweep_csr` exactly (the
+    dense word already carries the destination, so no ``dstN`` gather is
+    needed).
     """
     C = R * n_ch
     NQ = C * n_vc
@@ -341,10 +514,18 @@ def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
     srcs = jnp.tile(jnp.arange(n), R)
     lane_q = (jnp.arange(N) // n) * (n_ch * n_vc)
     thresh = (rates[:, None] * src_rate[None, :]).reshape(N)
+    if bursty:
+        phs = jnp.tile(phase, R)
+    if adaptive:
+        vc_q = jnp.arange(NQ) % n_vc
+        qrows = jnp.arange(NQ)
 
-    def cycle(i, carry):
-        q, head, size, rr, busy, key, stats = carry
-        offered, accepted, tagged, consumed_meas, consumed, injected = stats
+    def cycle(carry):
+        i, q, head, size, rr, busy, key, stall, wstall, stalled_at, \
+            stats = carry
+        offered, accepted, tagged, consumed_meas, consumed, injected, \
+            escaped = stats
+        ph = (i >= t_fault).astype(jnp.int32) if faulted else 0
 
         hw = q[jnp.arange(NQ), head]
         hs = hw & _FIELD_MASK
@@ -353,12 +534,63 @@ def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
         nonempty = size > 0
 
         consume_q = nonempty & (arrive_node == hd)
-        # pv packs channel * n_vc + vc per hop: one gather for both
-        nxt = pv[hs, hd, hh + 1]
         lane_base = (jnp.arange(NQ) // (n_ch * n_vc)) * (n_ch * n_vc)
-        tq = jnp.where(consume_q, -1, lane_base + nxt)
-        fwd_ok = nonempty & ~consume_q & (size[jnp.clip(tq, 0, NQ - 1)]
-                                          < slots)
+        if adaptive:
+            dq = hd
+            cand_ch = jnp.clip(outch[arrive_node], 0, n_ch - 1)
+            mm = minmask[ph, arrive_node, dq]
+            ok_cand = ((mm[:, None] >> jnp.arange(D)[None, :]) & 1) > 0
+            if faulted:
+                ok_cand = ok_cand & (alive[ph, cand_ch] > 0)
+            # free space of the queue the packet would actually join:
+            # its destination-bound adaptive VC on each candidate channel
+            vq = (1 + dq % (n_vc - 1))[:, None]
+            occ = size[lane_base[:, None] + cand_ch * n_vc + vq]
+            score = jnp.where(ok_cand, slots - occ, -1)
+            rot = (jnp.arange(D)[None, :] + qrows[:, None] + i) % D
+            j = jnp.argmax(score * D + rot, axis=1)    # rotating tie-break
+            best_ch = cand_ch[qrows, j]
+            has_cand = score[qrows, j] >= 0
+            bv = 1 + dq % (n_vc - 1)    # destination-bound VC (see CSR)
+            # planned-path-first, mirroring the CSR kernel
+            my_ch = (qrows // n_vc) % n_ch
+            pcur = pv[hs, hd, hh]
+            on_path = (pcur >= 0) & (pcur // n_vc == my_ch)
+            pnxt = pv[hs, hd, hh + 1]
+            chan_s = jnp.clip(pnxt, 0, n_ch * n_vc - 1) // n_vc
+            prim_occ = size[lane_base + chan_s * n_vc + bv]
+            best_occ = slots - score[qrows, j]    # slots + 1 when no cand
+            prim_take = on_path & (pnxt >= 0) & ~consume_q & (prim_occ < slots) \
+                & (prim_occ <= best_occ + 4)
+            if faulted:
+                prim_take = prim_take & (alive[ph, chan_s] > 0)
+            use_esc = (vc_q == 0) | (stall >= patience) \
+                | (~has_cand & ~prim_take)
+            e_ch = esc[ph, arrive_node, dq]
+            nxt_ch = jnp.where(use_esc, e_ch,
+                               jnp.where(prim_take, chan_s, best_ch))
+            nxt_vc = jnp.where(use_esc, 0, bv)
+            valid = nxt_ch >= 0
+            if faulted:
+                valid = valid & (alive[ph, jnp.clip(nxt_ch, 0,
+                                                    n_ch - 1)] > 0)
+            tq = jnp.where(consume_q | ~valid, -1,
+                           lane_base
+                           + jnp.clip(nxt_ch, 0, n_ch - 1) * n_vc
+                           + nxt_vc)
+            fwd_ok = nonempty & ~consume_q & (tq >= 0) \
+                & (size[jnp.clip(tq, 0, NQ - 1)] < slots)
+        else:
+            # pv packs channel * n_vc + vc per hop: one gather for both
+            nxt = pv[hs, hd, hh + 1]
+            tq = jnp.where(consume_q, -1, lane_base + nxt)
+            if faulted:
+                tq = jnp.where(alive[ph, nxt // n_vc] > 0, tq, -1)
+                fwd_ok = nonempty & ~consume_q & (tq >= 0) \
+                    & (size[jnp.clip(tq, 0, NQ - 1)] < slots)
+            else:
+                fwd_ok = nonempty & ~consume_q \
+                    & (size[jnp.clip(tq, 0, NQ - 1)] < slots)
         eligible = consume_q | fwd_ok
 
         eligible = eligible & jnp.repeat(busy == 0, n_vc)
@@ -386,11 +618,21 @@ def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
         busy = jnp.where(w_pop, flits - 1, jnp.maximum(busy - 1, 0))
 
         p_slot = (head[tgt] + size[tgt]) % slots
-        push_word = w_word + (1 << _HOP_SHIFT)
+        if adaptive:
+            w_hh = (w_word >> _HOP_SHIFT) & _HOP_MASK
+            push_word = jnp.where(w_hh >= _HOP_MASK, w_word,
+                                  w_word + (1 << _HOP_SHIFT))
+        else:
+            push_word = w_word + (1 << _HOP_SHIFT)
 
         measure = i >= warmup
         key, k1, k2, k3 = jax.random.split(key, 4)
-        want = jax.random.uniform(k1, (N,)) < thresh
+        if bursty:
+            on = ((i + phs) % period) < on_cycles
+            want = jax.random.uniform(k1, (N,)) \
+                < thresh * jnp.where(on, g_on, g_off)
+        else:
+            want = jax.random.uniform(k1, (N,)) < thresh
         u1 = jax.random.uniform(k2, (N,))
         dg = deg[srcs]
         j = jnp.minimum((u1 * dg.astype(jnp.float32)).astype(jnp.int32),
@@ -400,12 +642,26 @@ def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
         fid = jnp.where(u2 < fprob[f0], f0, falias[f0])
         dsts = fdst[fid]
         cv0 = pv[srcs, dsts, 0]
-        iq = lane_q + jnp.clip(cv0, 0, n_ch * n_vc - 1)
+        if adaptive or faulted:
+            ch0 = jnp.clip(cv0, 0, n_ch * n_vc - 1) // n_vc
+            ok0 = (alive[ph, ch0] > 0) if faulted \
+                else jnp.ones((N,), bool)
+            if adaptive:
+                iv = 1 + dsts % (n_vc - 1)
+                e0 = esc[ph, srcs, dsts]
+                cv0 = jnp.where(ok0, ch0 * n_vc + iv,
+                                jnp.maximum(e0, 0) * n_vc)
+                ok0 = ok0 | (e0 >= 0)
+            iq = lane_q + jnp.clip(cv0, 0, n_ch * n_vc - 1)
+        else:
+            iq = lane_q + jnp.clip(cv0, 0, n_ch * n_vc - 1)
         i_pop = (w_pop[iq // n_vc]
                  & (win_q[iq // n_vc] == iq)).astype(jnp.int32)
         i_push = (first[iq] < C).astype(jnp.int32)
         has_space = size[iq] - i_pop + i_push < slots
         inj = want & has_space & (dg > 0)
+        if adaptive or faulted:
+            inj = inj & ok0
         i_slot = (head[iq] + size[iq] + i_push) % slots
         inj_word = _pack(srcs, dsts, jnp.zeros((N,), jnp.int32),
                          measure & inj)
@@ -425,24 +681,49 @@ def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
 
         meas = jnp.where(measure, 1, 0)
         cons_lane = w_consume.reshape(R, n_ch).sum(axis=1)
+        inj_lane = inj.reshape(R, n).sum(axis=1)
         offered = offered + meas * want.reshape(R, n).sum(axis=1)
-        accepted = accepted + meas * inj.reshape(R, n).sum(axis=1)
+        accepted = accepted + meas * inj_lane
         tagged = tagged + (w_consume & (w_tag == 1)).reshape(
             R, n_ch).sum(axis=1)
         consumed_meas = consumed_meas + meas * cons_lane
         consumed = consumed + cons_lane
-        injected = injected + inj.reshape(R, n).sum(axis=1)
-        return (q, head, size, rr, busy, key,
-                (offered, accepted, tagged, consumed_meas, consumed,
-                 injected))
+        injected = injected + inj_lane
 
-    stats0 = (jnp.zeros((R,), jnp.int32),) * 6
-    carry = (q, head, size, rr, busy, key, stats0)
-    carry = jax.lax.fori_loop(0, cycles, cycle, carry)
-    size = carry[2]
-    offered, accepted, tagged, consumed_meas, consumed, injected = carry[-1]
+        if adaptive:
+            popped = w_pop[qrows // n_vc] & (win_q[qrows // n_vc] == qrows)
+            stall = jnp.where(nonempty & ~popped, stall + 1, 0)
+            escaped = escaped + (w_push & (tgt % n_vc == 0)
+                                 & (win_q % n_vc != 0)).reshape(
+                R, n_ch).sum(axis=1)
+
+        pop_lane = w_pop.reshape(R, n_ch).sum(axis=1)
+        progress = (pop_lane > 0) | (inj_lane > 0)
+        wstall = jnp.where((injected - consumed > 0) & ~progress,
+                           wstall + 1, 0)
+        stalled_at = jnp.where((wstall >= watchdog) & (stalled_at < 0),
+                               i, stalled_at)
+        return (i + 1, q, head, size, rr, busy, key, stall, wstall,
+                stalled_at,
+                (offered, accepted, tagged, consumed_meas, consumed,
+                 injected, escaped))
+
+    stats0 = (jnp.zeros((R,), jnp.int32),) * 7
+    stall0 = jnp.zeros((NQ if adaptive else 1,), jnp.int32)
+    carry = (jnp.int32(0), q, head, size, rr, busy, key, stall0,
+             jnp.zeros((R,), jnp.int32), jnp.full((R,), -1, jnp.int32),
+             stats0)
+
+    def cond(carry):
+        return (carry[0] < cycles) & ~jnp.all(carry[8] >= watchdog)
+
+    carry = jax.lax.while_loop(cond, cycle, carry)
+    size = carry[3]
+    stalled_at = carry[9]
+    offered, accepted, tagged, consumed_meas, consumed, injected, \
+        escaped = carry[-1]
     return (offered, accepted, tagged, consumed_meas, consumed, injected,
-            size.reshape(R, -1).sum(axis=1))
+            escaped, size.reshape(R, -1).sum(axis=1), stalled_at, carry[0])
 
 
 def _compiled_flows(traffic, tables: SimTables) -> CompiledFlowTraffic:
@@ -456,12 +737,62 @@ def _compiled_flows(traffic, tables: SimTables) -> CompiledFlowTraffic:
     return ct
 
 
+@dataclasses.dataclass
+class AdaptiveSpec:
+    """Precomputed adaptive-routing tables for the sweep kernels.
+
+    ``esc``/``minmask`` are stacked (2, n, n): plane 0 is the pre-fault
+    network, plane 1 the post-fault survivors (identical when no fault is
+    injected). ``outch`` is the fixed per-node out-channel slot layout --
+    CSR out-adjacency order, fault-independent, so ``minmask`` bit ``j``
+    always refers to the same physical channel.
+    """
+    esc: np.ndarray       # (2, n, n) int32: escape next-channel, -1 none
+    outch: np.ndarray     # (n, D) int32: out-channels per node, -1 pad
+    minmask: np.ndarray   # (2, n, n) uint8: bit j <=> outch[u, j] minimal
+
+    @property
+    def D(self) -> int:
+        return self.outch.shape[1]
+
+
+def adaptive_spec(topo: Topology,
+                  dead_channels=None) -> AdaptiveSpec:
+    """Build the escape + minimal-alternate tables for adaptive sweeps.
+
+    When ``dead_channels`` is given, plane 1 of the stacked tables is
+    recomputed over the survivors (escape tree re-rooted around the
+    fault, minimal masks re-derived from surviving distances) -- the
+    kernel switches planes at the fault cycle.
+    """
+    from repro.core.routing import adaptive_route
+    from repro.core.vcalloc import escape_routes
+    e0 = escape_routes(topo)
+    a0 = adaptive_route(topo)
+    if not e0.connected:
+        raise ValueError("pre-fault escape tree does not span the "
+                         "network")
+    dc = _dead_channel_array(dead_channels)
+    if dc is None:
+        e1, a1 = e0, a0
+    else:
+        e1 = escape_routes(topo, dc)
+        a1 = adaptive_route(topo, dc)
+    return AdaptiveSpec(
+        np.stack([e0.esc_next, e1.esc_next]).astype(np.int32),
+        a0.outch.astype(np.int32),
+        np.stack([a0.minmask, a1.minmask]).astype(np.uint8))
+
+
 def sweep(tables: SimTables, rates: Sequence[float],
           traffic: Optional[Union[TrafficPattern, CompiledTraffic,
                                   CompiledFlowTraffic]] = None,
           cycles: int = 6000, warmup: int = 2000, slots: int = 128,
           seed: int = 0, flits: int = 4, kernel: str = "csr",
-          stats: Optional[dict] = None) -> List[Dict]:
+          stats: Optional[dict] = None,
+          adaptive: Optional[AdaptiveSpec] = None,
+          fault: Optional[Tuple[int, Sequence[int]]] = None,
+          patience: int = 64, watchdog: int = 512) -> List[Dict]:
     """Simulate every rate in one batched (lane-flattened) kernel
     execution; one dict per rate.
 
@@ -472,26 +803,93 @@ def sweep(tables: SimTables, rates: Sequence[float],
     kernels are bit-identical (the CSR parity tests rely on it). A
     ``stats`` dict, when given, records the kernel used and the peak
     device-array bytes staged per call under ``"array_bytes"``.
+
+    ``adaptive`` (an :func:`adaptive_spec` result) switches both kernels
+    to occupancy-driven minimal adaptive routing with the VC0 escape
+    lane; requires ``n_vc >= 2`` tables (VC0 reserved -- allocate with
+    ``reserve_escape=True``). ``fault=(t, dead_channels)`` kills the
+    given channels at cycle ``t`` mid-sweep: dead channels stop
+    accepting forwards/injections (their receive queues still drain),
+    and with ``adaptive`` set, in-flight packets re-resolve onto
+    surviving alternates or the re-rooted escape tree. ``patience`` is
+    the per-queue stalled-cycles threshold before an adaptive head
+    diverts to the escape VC; ``watchdog`` is the zero-progress window
+    after which a lane is declared stalled (``stalled_at`` per rate,
+    ``stats["cycles_run"]`` < ``cycles`` when every lane wedged and the
+    sweep aborted early).
     """
     if MAXHOP > _HOP_MASK:
         raise ValueError(f"packed packet words support MAXHOP <= "
                          f"{_HOP_MASK}")
+    if patience < 1:
+        raise ValueError("patience must be >= 1")
+    if watchdog < 1:
+        raise ValueError("watchdog must be >= 1")
+    adaptive_on = adaptive is not None
+    if adaptive_on and tables.n_vc < 2:
+        raise ValueError("adaptive routing reserves VC 0 as the escape "
+                         "lane and needs n_vc >= 2")
+    faulted = fault is not None
+    t_fault = 0
+    dead = None
+    if faulted:
+        t_fault, dead_in = fault
+        t_fault = int(t_fault)
+        if not 0 <= t_fault <= cycles:
+            raise ValueError(f"fault cycle {t_fault} outside "
+                             f"[0, {cycles}]")
+        dead = _dead_channel_array(dead_in)
+        if dead is not None and ((dead < 0).any()
+                                 or (dead >= tables.n_ch).any()):
+            bad = dead[(dead < 0) | (dead >= tables.n_ch)]
+            raise ValueError(f"unknown channel ids {bad.tolist()} "
+                             f"(topology has {tables.n_ch} channels)")
+    alive_np = np.ones((2, tables.n_ch), np.int32)
+    if faulted and dead is not None:
+        alive_np[1, dead] = 0
+    if adaptive_on:
+        esc_np = np.ascontiguousarray(adaptive.esc, np.int32)
+        outch_np = np.ascontiguousarray(adaptive.outch, np.int32)
+        minmask_np = np.ascontiguousarray(adaptive.minmask, np.uint8)
+        D = adaptive.D
+        if esc_np.shape != (2, tables.n, tables.n):
+            raise ValueError("adaptive spec built for a different "
+                             "topology")
+    else:
+        esc_np = np.zeros((2, 1, 1), np.int32)
+        outch_np = np.zeros((1, 1), np.int32)
+        minmask_np = np.zeros((2, 1, 1), np.uint8)
+        D = 1
     ct = _compiled_flows(traffic, tables)
+    burst = ct.burst
+    bursty = burst is not None
+    if bursty:
+        on_cycles, g_on, g_off, phase_np = burst.realize(tables.n)
+        period = int(burst.period)
+    else:
+        period, on_cycles, g_on, g_off = 0, 0, 1.0, 1.0
+        phase_np = np.zeros(tables.n, np.int32)
     rates = np.asarray(list(rates), np.float32)
     R = len(rates)
     NQ = R * tables.n_ch * tables.n_vc
     F = len(ct.prob)
     state_bytes = NQ * slots * 4 + NQ * 8 + R * tables.n_ch * 8
+    if adaptive_on:
+        state_bytes += NQ * 4     # per-queue stall counters
     traffic_bytes = (ct.src_indptr.nbytes + ct.deg.nbytes + ct.prob.nbytes
                      + ct.alias.nbytes + ct.src_rate.nbytes)
+    aux_bytes = (esc_np.nbytes + outch_np.nbytes + minmask_np.nbytes
+                 + alive_np.nbytes + phase_np.nbytes)
     if F == 0:
         if stats is not None:
             stats["kernel"] = kernel
+            stats["cycles_run"] = cycles
             stats["array_bytes"] = max(stats.get("array_bytes", 0),
                                        state_bytes + traffic_bytes)
         return [{"rate": float(r), "offered": 0.0, "accepted": 0.0,
                  "delivered": 0.0, "delivered_tagged": 0.0,
-                 "consumed_total": 0, "injected_total": 0, "in_flight": 0}
+                 "consumed_total": 0, "injected_total": 0, "in_flight": 0,
+                 "escaped": 0, "stalled_at": -1}
                 for r in rates]
     if kernel == "csr":
         t = tables.csr()
@@ -502,9 +900,10 @@ def sweep(tables: SimTables, rates: Sequence[float],
                + t.vc.astype(np.int64)).astype(np.int32)
         hptr = t.hop_indptr[:-1].astype(np.int32)
         lenm1 = (np.diff(t.hop_indptr) - 1).astype(np.int32)
-        route_bytes = pvf.nbytes + hptr.nbytes + lenm1.nbytes
+        dstN = np.asarray(t.dst, np.int32)   # flow -> destination node
+        route_bytes = pvf.nbytes + hptr.nbytes + lenm1.nbytes + dstN.nbytes
         args = (jnp.asarray(tables.ch_dst), jnp.asarray(pvf),
-                jnp.asarray(hptr), jnp.asarray(lenm1))
+                jnp.asarray(hptr), jnp.asarray(lenm1), jnp.asarray(dstN))
         fn = _sweep_csr
     elif kernel == "dense":
         if tables.n > _FIELD_MASK:
@@ -525,17 +924,28 @@ def sweep(tables: SimTables, rates: Sequence[float],
         stats["kernel"] = kernel
         stats["array_bytes"] = max(stats.get("array_bytes", 0),
                                    state_bytes + traffic_bytes
-                                   + route_bytes)
+                                   + route_bytes + aux_bytes)
     # the simulator's integer carries are written for 32-bit mode; shield
     # it from processes that enabled x64 (e.g. the LP solver)
     with jax.experimental.disable_x64():
         out = fn(*args, jnp.asarray(ct.src_indptr[:-1]),
                  jnp.asarray(ct.deg), jnp.asarray(ct.prob),
                  jnp.asarray(ct.alias), jnp.asarray(ct.src_rate),
-                 jnp.asarray(rates), jax.random.PRNGKey(seed), R=R,
+                 jnp.asarray(rates), jax.random.PRNGKey(seed),
+                 jnp.asarray(outch_np), jnp.asarray(minmask_np),
+                 jnp.asarray(esc_np), jnp.asarray(alive_np),
+                 jnp.int32(t_fault), jnp.float32(g_on), jnp.float32(g_off),
+                 jnp.asarray(np.asarray(phase_np, np.int32)), R=R,
                  n=tables.n, n_ch=tables.n_ch, n_vc=tables.n_vc,
-                 slots=slots, cycles=cycles, warmup=warmup, flits=flits)
-    off, acc, tagd, consm, cons, injd, infl = (np.asarray(a) for a in out)
+                 slots=slots, cycles=cycles, warmup=warmup, flits=flits,
+                 adaptive=adaptive_on, faulted=faulted, bursty=bursty,
+                 patience=patience, watchdog=watchdog, D=D, period=period,
+                 on_cycles=on_cycles)
+    off, acc, tagd, consm, cons, injd, escd, infl, stalled = \
+        (np.asarray(a) for a in out[:-1])
+    cycles_run = int(out[-1])
+    if stats is not None:
+        stats["cycles_run"] = cycles_run
     meas = cycles - warmup
     trace = []
     for i, rate in enumerate(rates):
@@ -550,6 +960,10 @@ def sweep(tables: SimTables, rates: Sequence[float],
             "consumed_total": int(cons[i]),
             "injected_total": int(injd[i]),
             "in_flight": int(infl[i]),
+            # adaptive diagnostics: escape-lane diversions and the cycle
+            # the lane's watchdog fired (-1 = never stalled)
+            "escaped": int(escd[i]),
+            "stalled_at": int(stalled[i]),
         })
     return trace
 
@@ -559,11 +973,15 @@ def run(tables: SimTables, rate: float,
                                 CompiledFlowTraffic]] = None,
         cycles: int = 6000, warmup: int = 2000, slots: int = 128,
         seed: int = 0, flits: int = 4, kernel: str = "csr",
-        stats: Optional[dict] = None) -> Dict:
+        stats: Optional[dict] = None,
+        adaptive: Optional[AdaptiveSpec] = None,
+        fault: Optional[Tuple[int, Sequence[int]]] = None,
+        patience: int = 64, watchdog: int = 512) -> Dict:
     """Single-rate convenience wrapper over :func:`sweep`."""
     return sweep(tables, [rate], traffic, cycles=cycles, warmup=warmup,
                  slots=slots, seed=seed, flits=flits, kernel=kernel,
-                 stats=stats)[0]
+                 stats=stats, adaptive=adaptive, fault=fault,
+                 patience=patience, watchdog=watchdog)[0]
 
 
 def saturation_point(tables: SimTables, step: float = 0.01,
@@ -574,8 +992,10 @@ def saturation_point(tables: SimTables, step: float = 0.01,
                                              CompiledTraffic,
                                              CompiledFlowTraffic]] = None,
                      seed: int = 0, kernel: str = "csr",
-                     stats: Optional[dict] = None) -> Tuple[float,
-                                                            List[Dict]]:
+                     stats: Optional[dict] = None,
+                     adaptive: Optional[AdaptiveSpec] = None,
+                     patience: int = 64,
+                     watchdog: int = 512) -> Tuple[float, List[Dict]]:
     """Saturation = last rate whose delivered throughput covers
     (1 - deficit) of offered, before the first shortfall.
 
@@ -588,7 +1008,10 @@ def saturation_point(tables: SimTables, step: float = 0.01,
     saturation accuracy -- within the deficit criterion's own noise.
 
     The traffic pattern is compiled onto the table's flow slots once and
-    shared by every stage; ``kernel``/``stats`` forward to :func:`sweep`.
+    shared by every stage; ``kernel``/``stats``/``adaptive`` forward to
+    :func:`sweep` (mid-sweep faults do not -- a fault cycle is only
+    meaningful against one fixed cycle budget, so fault studies call
+    :func:`sweep` directly).
     """
     ct = _compiled_flows(traffic, tables)
     rates = np.arange(step, max_rate + 1e-9, step)
@@ -599,7 +1022,8 @@ def saturation_point(tables: SimTables, step: float = 0.01,
     coarse = sweep(tables, rates[coarse_idx], ct,
                    cycles=max(cycles // 2, warmup // 2 + 1),
                    warmup=warmup // 2, slots=slots, seed=seed, flits=flits,
-                   kernel=kernel, stats=stats)
+                   kernel=kernel, stats=stats, adaptive=adaptive,
+                   patience=patience, watchdog=watchdog)
 
     def ok(r):
         return r["delivered"] >= (1 - deficit) * r["offered"]
@@ -618,7 +1042,8 @@ def saturation_point(tables: SimTables, step: float = 0.01,
     while True:
         fine = sweep(tables, rates[lo:hi], ct, cycles=cycles,
                      warmup=warmup, slots=slots, seed=seed, flits=flits,
-                     kernel=kernel, stats=stats)
+                     kernel=kernel, stats=stats, adaptive=adaptive,
+                     patience=patience, watchdog=watchdog)
         trace = fine + trace
         if lo == 0 or (fine and ok(fine[0])):
             break
@@ -699,7 +1124,8 @@ def dor_tables(topo: Topology, n_vc: int = 2) -> SimTables:
 
 def at_tables(topo: Topology, at: ATResult, routed: RoutingResult,
               balance: Optional[bool] = True,
-              stats: Optional[dict] = None) -> SimTables:
+              stats: Optional[dict] = None,
+              reserve_escape: bool = False) -> SimTables:
     """VC-allocate the routed paths and build simulator tables.
 
     Works on a copy of ``routed.table`` so the caller's RoutingResult is
@@ -714,10 +1140,16 @@ def at_tables(topo: Topology, at: ATResult, routed: RoutingResult,
     construction (fast path for large pods / fault sweeps where the
     balanced re-allocation is not needed). ``stats`` is forwarded to
     :func:`~repro.core.vcalloc.allocate_vcs` (greedy dead-end
-    counters)."""
+    counters). ``reserve_escape=True`` keeps VC 0 free for the adaptive
+    escape lane (forwarded to the allocator; requires re-allocation,
+    i.e. ``balance`` not None)."""
     from repro.core.vcalloc import allocate_vcs
+    if reserve_escape and balance is None:
+        raise ValueError("reserve_escape needs VC re-allocation "
+                         "(balance=True or False)")
     table = routed.table.copy()
     if balance is not None:
-        allocate_vcs(at, table, balance=balance, stats=stats)
+        allocate_vcs(at, table, balance=balance, stats=stats,
+                     reserve_escape=reserve_escape)
     table.n_vc = at.n_vc
     return build_tables(topo, table)

@@ -332,6 +332,21 @@ class CSRPathTable:
     def vc_hop_counts(self) -> np.ndarray:
         return np.bincount(self.vc.astype(np.int64), minlength=self.n_vc)
 
+    def escape_flows(self) -> np.ndarray:
+        """Flow ids an escape-reserving VC allocation marked all-VC0
+        (:func:`repro.core.vcalloc.allocate_vcs` with
+        ``reserve_escape=True`` assigns VCs >= 1 everywhere else), i.e.
+        the flows the adaptive kernel escape-routes from injection.
+        Only meaningful on such tables -- on a normal allocation this
+        simply returns the flows that happen to ride VC0 end to end."""
+        lens = self.flow_len.astype(np.int64)
+        nz = np.nonzero(lens > 0)[0]
+        if not len(nz):
+            return nz
+        vmax = np.maximum.reduceat(self.vc.astype(np.int64),
+                                   self.hop_indptr[nz])
+        return nz[vmax == 0]
+
     # ---- dict views (API edges only) --------------------------------------
 
     def as_dicts(self) -> Tuple[Dict[Tuple[int, int], Tuple[int, ...]],

@@ -345,6 +345,22 @@ def _exact_bfs(at2: ATResult, srcs: np.ndarray, dead_all: np.ndarray,
     return out
 
 
+def _validated_dead(dead_channels, n_ch: int) -> np.ndarray:
+    """Normalise a dead-channel list for the repair entry points:
+    deduplicated sorted int64 ids (``_dead_channel_array``), with ids
+    outside ``[0, n_ch)`` rejected loudly -- a negative id would
+    otherwise wrap through numpy fancy indexing and silently corrupt an
+    unrelated channel's state."""
+    dc = _dead_channel_array(dead_channels)
+    if dc is None:
+        return np.zeros(0, np.int64)
+    bad = dc[(dc < 0) | (dc >= n_ch)]
+    if len(bad):
+        raise ValueError(f"unknown channel ids {bad.tolist()} "
+                         f"(topology has {n_ch} channels)")
+    return dc
+
+
 def repair_fault(state: ServingState, dead_channels,
                  local_search_rounds: int = 1, refine_block: int = 192,
                  readmit: str = "auto", verify: str = "pool",
@@ -353,6 +369,12 @@ def repair_fault(state: ServingState, dead_channels,
     ``dead_channels`` fail. Pure: the input state (its AT, table, loads,
     stores) is never mutated; the repaired state comes back on the
     :class:`RepairResult`.
+
+    ``dead_channels`` is deduplicated; out-of-range or negative ids
+    raise ``ValueError``. Channels already dead in the serving state are
+    a no-op (their flows were re-routed when they first died) -- the
+    repair only walks flows crossing *newly* dead channels, and
+    ``stats["already_dead"]`` counts the redundant ids.
 
     ``readmit="auto"`` resumes turn admission only when pruning breaks
     reachability (``"never"`` disables it, ``"always"`` forces one
@@ -369,14 +391,14 @@ def repair_fault(state: ServingState, dead_channels,
     n, n_vc = ch.n_nodes, at.n_vc
     SEN = ch.n
     K = state.K
-    dc = _dead_channel_array(dead_channels)
-    if dc is None:
-        dc = np.zeros(0, np.int64)
+    dc = _validated_dead(dead_channels, SEN)
+    new = np.setdiff1d(dc, state.dead)
+    stats["already_dead"] = int(len(dc) - len(new))
     dead_all = np.union1d(state.dead, dc)
     dead_mask = np.zeros(SEN, bool)
     dead_mask[dead_all] = True
     new_mask = np.zeros(SEN, bool)
-    new_mask[dc] = True
+    new_mask[new] = True
     dead_state = (dead_all[:, None] * n_vc
                   + np.arange(n_vc)).ravel() if len(dead_all) else \
         np.zeros(0, np.int64)
@@ -618,9 +640,9 @@ def full_recompute(state: ServingState, dead_channels=None
     then re-select and re-allocate *every* flow from scratch in the same
     channel-id space. Returns ``(routed, vc_counts, at2)``; repair
     quality (post-repair ``l_max``) and recovery wall-clock are measured
-    against this."""
-    dc = _dead_channel_array(dead_channels)
-    dead_all = state.dead if dc is None else np.union1d(state.dead, dc)
+    against this. Input ids are validated like :func:`repair_fault`."""
+    dc = _validated_dead(dead_channels, state.at.channels.n)
+    dead_all = np.union1d(state.dead, dc)
     dead_mask = np.zeros(state.at.channels.n, bool)
     dead_mask[dead_all] = True
     at2 = _pruned_at(state.at, dead_mask)

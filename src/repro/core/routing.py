@@ -1138,6 +1138,87 @@ def _dead_channel_array(dead_channels) -> Optional[np.ndarray]:
 
 
 # ---------------------------------------------------------------------------
+# Minimal-alternate export for the adaptive simulator kernel
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AdaptiveRouteTable:
+    """Per-(node, destination) minimal next-hop alternates, packed for the
+    adaptive netsim kernel.
+
+    The candidate enumerator walks exactly these minimal parents when it
+    builds the (F, K, L) path tensor, then keeps only the K winning
+    chains; this exports what it throws away, collapsed to the per-hop
+    decision the simulator needs: from node ``u`` toward destination
+    ``d``, bit ``j`` of ``minmask[u, d]`` says whether the ``j``-th
+    outgoing channel of ``u`` (``outch[u, j]``) lies on *some* minimal
+    path (``dist[dst(c), d] == dist[u, d] - 1`` over surviving
+    channels). A packet holding the table can therefore pick among every
+    minimal alternate by live downstream occupancy instead of replaying
+    one frozen choice. Distances are plain channel-hop BFS (VC-free):
+    the adaptive VCs place no turn restriction -- deadlock freedom comes
+    from the reserved escape sub-network, not from the adaptive lanes.
+    """
+    n: int
+    outch: np.ndarray       # (n, D) int32 out-channels per node, -1 pad
+    minmask: np.ndarray     # (n, n) uint8: bit j <=> outch[u, j] minimal
+    dist: np.ndarray        # (n, n) int16 surviving hop distance, -1 pad
+
+    @property
+    def D(self) -> int:
+        return self.outch.shape[1]
+
+
+def adaptive_route(topo: Topology, dead_channels=None
+                   ) -> AdaptiveRouteTable:
+    """Build the minimal-alternate table over the surviving channels.
+
+    ``outch`` slots are fixed by the topology (CSR out-adjacency order),
+    independent of the fault set, so a pre-fault and a post-fault table
+    share slot indexing and the kernel can swap ``minmask`` mid-sweep
+    without re-indexing queues. Dead channels simply never set their
+    minimal bit (and contribute no edge to the distance field).
+    """
+    import scipy.sparse as sp
+    import scipy.sparse.csgraph as csg
+    ch = Channels.from_topology(topo)
+    n = ch.n_nodes
+    dc = _dead_channel_array(dead_channels)
+    alive = np.ones(ch.n, bool)
+    if dc is not None:
+        if (dc < 0).any() or (dc >= ch.n).any():
+            bad = dc[(dc < 0) | (dc >= ch.n)]
+            raise ValueError(f"unknown channel ids {bad.tolist()} "
+                             f"(topology has {ch.n} channels)")
+        alive[dc] = False
+    deg = np.diff(ch.out_indptr).astype(np.int64)
+    D = int(deg.max()) if n else 1
+    if D > 8:
+        raise ValueError(f"adaptive minmask packs at most 8 out-channels "
+                         f"per node (got degree {D})")
+    outch = np.full((n, D), -1, np.int32)
+    slot = np.arange(int(deg.sum()), dtype=np.int64) \
+        - np.repeat(ch.out_indptr[:-1].astype(np.int64), deg)
+    outch[np.repeat(np.arange(n), deg), slot] = ch.out_chan
+    a = sp.csr_matrix((np.ones(int(alive.sum()), np.float32),
+                       (ch.src[alive], ch.dst[alive])), shape=(n, n))
+    d = csg.shortest_path(a, method="D", unweighted=True)
+    dist = np.where(np.isinf(d), -1, d).astype(np.int16)
+    minmask = np.zeros((n, n), np.uint8)
+    for j in range(D):
+        c = outch[:, j]
+        ok = (c >= 0) & alive[np.clip(c, 0, ch.n - 1)]
+        nd = ch.dst[np.clip(c, 0, ch.n - 1)].astype(np.int64)
+        # (n, n): hop u -> dst(c) is on a minimal path toward every d
+        # with dist[u, d] == dist[dst(c), d] + 1 (both sides reachable)
+        dn = dist[nd]
+        cond = ok[:, None] & (dn >= 0) & (dist == dn + 1)
+        minmask |= (cond.astype(np.uint8) << j)
+    return AdaptiveRouteTable(n, outch, minmask, dist)
+
+
+# ---------------------------------------------------------------------------
 # Reference enumerator (per-source python BFS) -- kept as the equivalence
 # oracle for the array engine below; not on the hot path.
 # ---------------------------------------------------------------------------

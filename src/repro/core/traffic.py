@@ -127,6 +127,56 @@ def _alias_tables(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
 
 
 @dataclasses.dataclass(frozen=True)
+class BurstSchedule:
+    """Deterministic on/off injection modulation (time-varying traffic).
+
+    Each source's injection probability is multiplied by ``gain`` during
+    the first ``round(duty * period)`` cycles of its period (offset by
+    ``phase[src]``) and by the compensating off-gain
+    ``(1 - duty * gain) / (1 - duty)`` the rest -- mean-preserving by
+    construction, so bursty and steady sweeps at the same nominal rate
+    offer the same long-run load and their saturation points stay
+    comparable. ``phase=None`` synchronises every source (the hardest
+    case: the whole fabric bursts together); pass per-source offsets to
+    stagger.
+    """
+    period: int
+    duty: float
+    gain: float
+    phase: Optional[np.ndarray] = None   # (n,) int cycle offsets
+
+    def __post_init__(self):
+        if self.period < 2:
+            raise ValueError("burst period must be >= 2 cycles")
+        if not 0.0 < self.duty < 1.0:
+            raise ValueError("burst duty must be in (0, 1)")
+        if not 1.0 <= self.gain <= 1.0 / self.duty + 1e-9:
+            raise ValueError(f"burst gain must be in [1, 1/duty] "
+                             f"(got {self.gain}, duty {self.duty}); the "
+                             f"off-phase gain would go negative")
+
+    def realize(self, n: int):
+        """(on_cycles, g_on, g_off, phase array) for the kernel, with
+        the duty re-derived from the integer on-window so the mean is
+        preserved exactly."""
+        on = int(np.clip(round(self.duty * self.period), 1,
+                         self.period - 1))
+        duty = on / self.period
+        g_on = float(self.gain)
+        g_off = (1.0 - duty * g_on) / (1.0 - duty)
+        if g_off < 0:
+            raise ValueError(f"burst gain {self.gain} too high for the "
+                             f"realized duty {duty:.3f}")
+        if self.phase is None:
+            phase = np.zeros(n, np.int32)
+        else:
+            phase = np.asarray(self.phase, np.int32) % self.period
+            if phase.shape != (n,):
+                raise ValueError(f"burst phase must be ({n},)")
+        return on, g_on, g_off, phase
+
+
+@dataclasses.dataclass(frozen=True)
 class CompiledFlowTraffic:
     """Alias tables over the *flow slots* of a CSR path table.
 
@@ -138,6 +188,8 @@ class CompiledFlowTraffic:
     dropped at compile time (each live row renormalises over its routed
     flows), so offered traffic is always injectable; memory is O(F), not
     O(n^2) -- the sampling-side counterpart of the CSR simulator kernel.
+    ``burst`` (when set) rides along from the source pattern and makes
+    the kernel modulate injection thresholds over time.
     """
     n: int
     src_indptr: np.ndarray  # (n + 1,) int32: flow range of each source
@@ -145,6 +197,7 @@ class CompiledFlowTraffic:
     prob: np.ndarray        # (F,) float32: alias acceptance probability
     alias: np.ndarray       # (F,) int32: alias flow id (global)
     src_rate: np.ndarray    # (n,) float32: relative injection rate
+    burst: Optional[BurstSchedule] = None
 
 
 def compile_flow_traffic(traffic, src_indptr: np.ndarray,
@@ -171,12 +224,14 @@ def compile_flow_traffic(traffic, src_indptr: np.ndarray,
         # matrix entirely (134 MB at 16^3)
         return CompiledFlowTraffic(n, sptr.astype(np.int32), deg, prob,
                                    alias, np.ones(n, np.float32))
+    burst = None
     if isinstance(traffic, CompiledTraffic):
         matrix = traffic.row_probs()
         src_rate = np.asarray(traffic.src_rate, np.float32)
     else:
         matrix = traffic.matrix
         src_rate = np.asarray(traffic.src_rate, np.float32)
+        burst = traffic.burst
     if matrix.shape[0] != n:
         raise ValueError(f"pattern over {matrix.shape[0]} nodes, table "
                          f"over {n}")
@@ -197,15 +252,20 @@ def compile_flow_traffic(traffic, src_indptr: np.ndarray,
         alias[f0:f1] = (sptr[s0:s1, None].astype(np.int64)
                         + a.astype(np.int64))[colm].astype(np.int32)
     return CompiledFlowTraffic(n, sptr.astype(np.int32), deg, prob, alias,
-                               src_rate)
+                               src_rate, burst=burst)
 
 
 @dataclasses.dataclass
 class TrafficPattern:
-    """Demand matrix + per-source intensity; compiles to alias tables."""
+    """Demand matrix + per-source intensity; compiles to alias tables.
+
+    ``burst`` attaches a :class:`BurstSchedule`: the *spatial* pattern
+    (who talks to whom) is unchanged, only the injection intensity
+    becomes time-varying in the kernel."""
     name: str
     matrix: np.ndarray          # (n, n) float64, zero diagonal
     src_rate: Optional[np.ndarray] = None   # (n,), defaults to row-mass/mean
+    burst: Optional[BurstSchedule] = None
 
     def __post_init__(self):
         m = np.asarray(self.matrix, np.float64).copy()
@@ -226,6 +286,17 @@ class TrafficPattern:
         prob, alias = _alias_tables(self.matrix)
         return CompiledTraffic(prob, alias,
                                np.asarray(self.src_rate, np.float32))
+
+    def with_burst(self, period: int, duty: float = 0.25,
+                   gain: float = 3.0,
+                   phase: Optional[np.ndarray] = None) -> "TrafficPattern":
+        """Same spatial pattern, bursty in time (mean-preserving):
+        ``gain``x injection for ``duty`` of each ``period``, compensated
+        the rest. Returns a new pattern; the original is untouched."""
+        return TrafficPattern(f"{self.name}+burst{period}", self.matrix,
+                              src_rate=self.src_rate,
+                              burst=BurstSchedule(period, duty, gain,
+                                                  phase))
 
     # ---- constructors -----------------------------------------------------
 

@@ -38,12 +38,92 @@ canonical, so allocations are bit-identical either way.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.pathtable import CSRPathTable, PathTable
-from repro.core.routing import ATResult
+from repro.core.routing import (ATResult, Channels, _dead_channel_array,
+                                _tree_turns_array)
+
+
+# ---------------------------------------------------------------------------
+# Escape sub-network: VC 0 over a spanning-tree turn set
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EscapeRoutes:
+    """The always-safe escape sub-network for adaptive routing.
+
+    A BFS spanning tree over the *surviving* channels, its non-reversing
+    turn set (acyclic -- tree turns cannot close a cycle, the same
+    argument that seeds the allowed-turn admission), and the per-node
+    next-hop table the simulator kernel consumes: ``esc_next[u, d]`` is
+    the channel leaving ``u`` toward ``d`` along the unique tree path
+    (``-1`` on the diagonal and for unreachable pairs). A packet riding
+    VC 0 follows ``esc_next`` hop by hop and never leaves the tree, so
+    the escape channel-dependency graph is acyclic regardless of what
+    the adaptive VCs are doing -- Duato's condition for deadlock-free
+    adaptive routing with a connected escape layer.
+    """
+    n: int
+    tree_channels: np.ndarray   # (2(n-1),) both directions of tree edges
+    esc_next: np.ndarray        # (n, n) int32 next channel toward d, -1 pad
+    turns: np.ndarray           # (K, 2) (cin, cout) tree-turn set
+    connected: bool             # tree spans every surviving node pair
+
+
+def escape_routes(topo, dead_channels=None, root: int = 0) -> EscapeRoutes:
+    """Build the escape tree + next-hop table over surviving channels.
+
+    Dead channels are excluded before the BFS, so after a fault the
+    caller rebuilds this on the survivors and gets a valid post-fault
+    escape layer (the netsim kernel stacks the pre/post tables and
+    switches at the fault cycle).
+    """
+    import scipy.sparse as sp
+    import scipy.sparse.csgraph as csg
+    ch = Channels.from_topology(topo)
+    n = ch.n_nodes
+    dc = _dead_channel_array(dead_channels)
+    alive = np.ones(ch.n, bool)
+    if dc is not None:
+        if (dc < 0).any() or (dc >= ch.n).any():
+            bad = dc[(dc < 0) | (dc >= ch.n)]
+            raise ValueError(f"unknown channel ids {bad.tolist()} "
+                             f"(topology has {ch.n} channels)")
+        alive[dc] = False
+    a = sp.csr_matrix((np.ones(int(alive.sum()), np.float32),
+                       (ch.src[alive], ch.dst[alive])), shape=(n, n))
+    # BFS tree from `root`, then all-pairs next hops along the tree:
+    # pred[d, u] is u's predecessor on the path d -> u, i.e. the next
+    # node from u toward d (tree paths are unique and undirected)
+    tree = csg.breadth_first_tree(a, root, directed=False)
+    tr, tc = tree.nonzero()
+    und = sp.csr_matrix((np.ones(len(tr), np.float32), (tr, tc)),
+                        shape=(n, n))
+    und = und + und.T
+    dist, pred = csg.shortest_path(und, unweighted=True,
+                                   return_predecessors=True)
+    nxt = pred.T                                 # (u, d) -> next node
+    chan_of = np.full((n, n), -1, np.int32)
+    chan_of[ch.src[alive], ch.dst[alive]] = \
+        np.arange(ch.n, dtype=np.int32)[alive]
+    uu = np.repeat(np.arange(n), n)
+    vv = np.clip(nxt.ravel(), 0, n - 1)
+    esc_next = np.where(nxt.ravel() >= 0, chan_of[uu, vv], -1) \
+        .astype(np.int32).reshape(n, n)
+    np.fill_diagonal(esc_next, -1)
+    # both directions of every tree edge, as channel ids
+    fwd = chan_of[tr, tc]
+    bwd = chan_of[tc, tr]
+    tree_ch = np.concatenate([fwd, bwd])
+    tree_ch = np.sort(tree_ch[tree_ch >= 0]).astype(np.int64)
+    turns = _tree_turns_array(tree_ch.tolist(), ch)
+    connected = bool((dist[root] != np.inf).all()) and len(tr) == n - 1
+    return EscapeRoutes(n, tree_ch, esc_next, turns, connected)
 
 
 def _assign_path(at: ATResult, path, priority: int) -> Optional[List[int]]:
@@ -92,13 +172,20 @@ def _turn_vc_table(at: ATResult) -> Tuple[np.ndarray, np.ndarray]:
 
 
 def _lookahead_vcs(at: ATResult, P: np.ndarray, lens: np.ndarray,
-                   vorder: List[int], stats: Optional[dict] = None
-                   ) -> np.ndarray:
+                   vorder: List[int], stats: Optional[dict] = None,
+                   forbid_vc0: bool = False) -> np.ndarray:
     """Exact-lookahead per-hop VC assignment for a block of paths.
 
     ``P (B, W)`` are channel sequences (< 0 pad), ``lens`` the true hop
     counts. Returns ``V (B, W)`` (garbage beyond each flow's length);
     raises if some flow admits no valid assignment at all.
+
+    ``forbid_vc0`` reserves VC 0 as the adaptive-routing escape lane:
+    assignments are restricted to VCs >= 1, and a flow with no viable
+    all-adaptive assignment falls back to an all-VC0 marking instead of
+    raising (counted in ``stats['escape_fallback_flows']``) -- the
+    adaptive kernel treats a VC0 occupant as escape-routed from hop 0,
+    which is always deliverable over the escape tree.
     """
     turn_keys, vcmat = _turn_vc_table(at)
     n_vc = at.n_vc
@@ -119,10 +206,16 @@ def _lookahead_vcs(at: ATResult, P: np.ndarray, lens: np.ndarray,
     # sweep: can the suffix from hop h on VC v still complete?
     M = vcmat[tid].astype(np.uint8)            # (B, W-1, n_vc, n_vc)
     backs = np.ones((B, W, n_vc), np.uint8)
+    if forbid_vc0:
+        backs[:, :, 0] = 0                     # VC0 is the escape lane
     for h in range(W - 2, -1, -1):
         np.einsum("bij,bj->bi", M[:, h], backs[:, h + 1],
                   out=backs[:, h])
         np.minimum(backs[:, h], 1, out=backs[:, h])
+        if forbid_vc0:
+            # keep VC0 out of the viability recursion too: a suffix that
+            # completes only through VC0 must not count as viable
+            backs[:, h, 0] = 0
     # forward sweep: first priority-ordered VC that is edge-compatible
     # with the previous hop and suffix-viable; track alongside what the
     # lookahead-free greedy would have done (its dead-ends are the flows
@@ -157,9 +250,19 @@ def _lookahead_vcs(at: ATResult, P: np.ndarray, lens: np.ndarray,
         ndead |= live & (nchoice < 0)
         naive = np.where(live & (nchoice >= 0), nchoice, naive)
     if not ok.all():
-        f = int(np.nonzero(~ok)[0][0])
-        raise RuntimeError(f"path {P[f, :lens[f]].tolist()} has no valid "
-                           f"VC assignment")
+        if forbid_vc0:
+            # no all-adaptive assignment exists: mark the whole flow as
+            # escape-routed (VC0 from hop 0) -- always deliverable over
+            # the escape tree, never deadlocks, just not adaptive
+            V[~ok] = 0
+            if stats is not None:
+                stats["escape_fallback_flows"] = \
+                    stats.get("escape_fallback_flows", 0) \
+                    + int((~ok).sum())
+        else:
+            f = int(np.nonzero(~ok)[0][0])
+            raise RuntimeError(f"path {P[f, :lens[f]].tolist()} has no "
+                               f"valid VC assignment")
     if stats is not None:
         stats["greedy_dead_ends"] = stats.get("greedy_dead_ends", 0) \
             + int((ndead & (lens > 0)).sum())
@@ -168,7 +271,8 @@ def _lookahead_vcs(at: ATResult, P: np.ndarray, lens: np.ndarray,
 
 def allocate_vcs(at: ATResult, table: Union[PathTable, CSRPathTable],
                  balance: bool = True, block: Optional[int] = None,
-                 stats: Optional[dict] = None) -> np.ndarray:
+                 stats: Optional[dict] = None,
+                 reserve_escape: bool = False) -> np.ndarray:
     """Fill the table's VC hops in place for every routed pair; returns
     the hops-per-VC counts ``(n_vc,)``.
 
@@ -179,8 +283,16 @@ def allocate_vcs(at: ATResult, table: Union[PathTable, CSRPathTable],
     compatibility gather with exact lookahead (identical output to the
     old first-fit + per-flow DFS fallback, with the fallback frequency
     surfaced in ``stats['greedy_dead_ends']`` instead of paid for).
+
+    ``reserve_escape`` keeps VC 0 free for the adaptive simulator's
+    escape lane: every assignment uses VCs >= 1 only, and flows with no
+    all-adaptive assignment are marked all-VC0 (escape-routed from
+    injection; see :func:`_lookahead_vcs`). Requires ``n_vc >= 2``.
     """
     n_vc = at.n_vc
+    if reserve_escape and n_vc < 2:
+        raise ValueError("reserve_escape needs n_vc >= 2 (VC 0 is the "
+                         "escape lane)")
     counts = np.zeros(n_vc, dtype=np.int64)
     csr = isinstance(table, CSRPathTable)
     if csr:
@@ -200,9 +312,14 @@ def allocate_vcs(at: ATResult, table: Union[PathTable, CSRPathTable],
             sb, db = ss[i:hi], dd[i:hi]
             lens = table.hops[sb, db].astype(np.int64)
             P = table.path[sb, db, :int(lens.max())].astype(np.int64)
-        pr = int(np.argmin(counts)) if balance else 0
-        vorder = [pr] + [v for v in range(n_vc) if v != pr]
-        V = _lookahead_vcs(at, P, lens, vorder, stats=stats)
+        if reserve_escape:
+            pr = 1 + int(np.argmin(counts[1:])) if balance else 1
+            vorder = [pr] + [v for v in range(1, n_vc) if v != pr]
+        else:
+            pr = int(np.argmin(counts)) if balance else 0
+            vorder = [pr] + [v for v in range(n_vc) if v != pr]
+        V = _lookahead_vcs(at, P, lens, vorder, stats=stats,
+                           forbid_vc0=reserve_escape)
         live = np.arange(P.shape[1])[None, :] < lens[:, None]
         if csr:
             table.set_block_vcs(i, hi, V, lens)

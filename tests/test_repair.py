@@ -228,6 +228,66 @@ def test_fault_sweep_repair_mode(served):
 
 
 # ---------------------------------------------------------------------------
+# fault-input hardening
+# ---------------------------------------------------------------------------
+
+
+def test_repair_rejects_unknown_channel_ids(served):
+    topo, st = served
+    n_ch = st.at.channels.n
+    with pytest.raises(ValueError, match="unknown channel ids"):
+        repair_fault(st, [n_ch + 7])
+    with pytest.raises(ValueError, match="unknown channel ids"):
+        repair_fault(st, [-1])
+    with pytest.raises(ValueError, match="unknown channel ids"):
+        full_recompute(st, [0, n_ch])
+
+
+def test_repair_deduplicates_fault_input(served):
+    topo, st = served
+    color = F.colors_in_use(topo)[0]
+    dead = F.dead_channels_for_color(st.at, color)
+    dup = np.concatenate([dead, dead[::-1], dead[:3]])
+    a = repair_fault(st, dead)
+    b = repair_fault(st, dup)
+    assert a.flows_rerouted == b.flows_rerouted
+    assert a.l_max == b.l_max
+    np.testing.assert_array_equal(a.state.table.chan, b.state.table.chan)
+    np.testing.assert_array_equal(a.state.dead, b.state.dead)
+
+
+def test_repair_already_dead_channels_are_noop(served):
+    topo, st = served
+    color = F.colors_in_use(topo)[0]
+    dead = F.dead_channels_for_color(st.at, color)
+    first = repair_fault(st, dead)
+    assert first.stats["already_dead"] == 0
+    # repeating the identical fault against the repaired state must not
+    # move a single flow -- the channels are already routed around
+    again = repair_fault(first.state, dead)
+    assert again.stats["already_dead"] == len(dead)
+    assert again.flows_rerouted == 0
+    assert again.unreachable == 0
+    assert again.deadlock_free
+    np.testing.assert_array_equal(again.state.table.chan,
+                                  first.state.table.chan)
+    np.testing.assert_array_equal(again.state.dead, first.state.dead)
+
+
+def test_repair_mixed_new_and_already_dead(served):
+    topo, st = served
+    colors = F.colors_in_use(topo)
+    d0 = F.dead_channels_for_color(st.at, colors[0])
+    d1 = F.dead_channels_for_color(st.at, colors[1])
+    first = repair_fault(st, d0)
+    both = repair_fault(first.state, np.concatenate([d0, d1]))
+    assert both.stats["already_dead"] == len(d0)
+    np.testing.assert_array_equal(both.state.dead, np.union1d(d0, d1))
+    assert not _dead_mask(st, np.union1d(d0, d1))[
+        both.state.table.chan].any()
+
+
+# ---------------------------------------------------------------------------
 # 12^3 smoke (opt-in)
 # ---------------------------------------------------------------------------
 
