@@ -276,7 +276,7 @@ def main(full: bool = False, json_path=None) -> dict:
     s_csr: dict = {}
     s_dense: dict = {}
     NS.sweep(tab8, rates8, cycles=1500, warmup=500, stats=s_csr)  # warm jit
-    _, t_sweep8 = median_timed(
+    trace8, t_sweep8 = median_timed(
         lambda: NS.sweep(tab8, rates8, cycles=1500, warmup=500,
                          stats=s_csr), repeats=3)
     NS.sweep(tab8, rates8[:1], cycles=200, warmup=100, kernel="dense",
@@ -292,12 +292,26 @@ def main(full: bool = False, json_path=None) -> dict:
         "bytes_ratio": round(s_dense["array_bytes"]
                              / max(s_csr["array_bytes"], 1), 2),
         "peak_rss_mb": peak_rss_mb(),
+        # livelock-watchdog outputs of the guarded sweep: the cycle each
+        # rate lane's watchdog fired (-1 = quiet) and how many cycles
+        # the kernel actually ran (< cycles means every lane wedged and
+        # the sweep ended early)
+        "watchdog": {
+            "cycles_run": int(s_csr.get("cycles_run", 0)),
+            "stalled_at": [int(r["stalled_at"]) for r in trace8],
+        },
     }
     result["n512"] = n512
     print(f"  n512: sweep({len(rates8)} rates)={t_sweep8:.2f}s "
           f"sat={sat8:.4f} csr_bytes={n512['csr_array_bytes']:,} "
           f"dense_bytes={n512['dense_array_bytes']:,} "
           f"({n512['bytes_ratio']}x) rss={n512['peak_rss_mb']}MB")
+    print(f"  n512 watchdog: cycles_run="
+          f"{n512['watchdog']['cycles_run']} stalled_at="
+          f"{n512['watchdog']['stalled_at']}")
+    emit("bench_netsim_n512_watchdog", 0,
+         f"cycles_run={n512['watchdog']['cycles_run']} "
+         f"stalled_at={n512['watchdog']['stalled_at']}")
     emit("bench_netsim_n512_sweep", t_sweep8 * 1e6,
          f"csr_bytes={n512['csr_array_bytes']}")
     if json_path:
@@ -329,20 +343,25 @@ def main(full: bool = False, json_path=None) -> dict:
     # saturates below any usable grid at n=512)
     hot8 = TrafficPattern.hotspot(topo8.n, list(range(8)), 0.4)
     t0 = time.time()
-    sat_s8, _ = NS.saturation_point(atab8, step=0.005, max_rate=0.08,
-                                    cycles=1500, warmup=500,
-                                    traffic=hot8)
+    sat_s8, tr_s8 = NS.saturation_point(atab8, step=0.005, max_rate=0.08,
+                                        cycles=1500, warmup=500,
+                                        traffic=hot8)
     t_stat8 = time.time() - t0
     t0 = time.time()
-    sat_a8, _ = NS.saturation_point(atab8, step=0.005, max_rate=0.08,
-                                    cycles=1500, warmup=500,
-                                    traffic=hot8, adaptive=spec8)
+    sat_a8, tr_a8 = NS.saturation_point(atab8, step=0.005, max_rate=0.08,
+                                        cycles=1500, warmup=500,
+                                        traffic=hot8, adaptive=spec8)
     t_adapt8 = time.time() - t0
     n512["adaptive"] = {
         "hotspot_sat_static": round(sat_s8, 5),
         "hotspot_sat_adaptive": round(sat_a8, 5),
         "sat_static_s": round(t_stat8, 4),
         "sat_adaptive_s": round(t_adapt8, 4),
+        # lanes whose livelock watchdog fired during the hotspot probes
+        "stalled_lanes_static": sum(1 for r in tr_s8
+                                    if r["stalled_at"] >= 0),
+        "stalled_lanes_adaptive": sum(1 for r in tr_a8
+                                      if r["stalled_at"] >= 0),
     }
     print(f"  n512 adaptive: hotspot sat static={sat_s8:.4f} "
           f"adaptive={sat_a8:.4f} ({t_stat8:.1f}s/{t_adapt8:.1f}s)")

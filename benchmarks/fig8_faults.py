@@ -116,18 +116,31 @@ def main(full: bool = False) -> None:
         ev = F.fault_event(at, color0, 800)
         atab = NS.at_tables(topo, at, base, reserve_escape=True)
         aspec = NS.adaptive_spec(topo, dead_channels=ev[1])
+        wstats: dict = {}
         stt = NS.sweep(atab, [0.1], cycles=2000, warmup=800,
-                       fault=ev)[0]
+                       fault=ev, stats=wstats)[0]
+        st_cycles = wstats.get("cycles_run")
         adt = NS.sweep(atab, [0.1], cycles=2000, warmup=800, fault=ev,
-                       adaptive=aspec)[0]
+                       adaptive=aspec, stats=wstats)[0]
         print(f"        mid-sweep fault c{color0}@800: stranded "
               f"in-flight static={stt['in_flight']} "
               f"adaptive={adt['in_flight']} "
               f"(escaped={adt['escaped']}, watchdog "
               f"{'quiet' if adt['stalled_at'] < 0 else 'FIRED'})")
+        # watchdog outputs, surfaced: the cycle each lane's livelock
+        # watchdog fired (-1 = never) and the cycles the kernels ran
+        # (static strands packets but must not wedge the whole lane)
+        print(f"        watchdog: static stalled_at={stt['stalled_at']} "
+              f"cycles_run={st_cycles} | adaptive "
+              f"stalled_at={adt['stalled_at']} "
+              f"cycles_run={wstats.get('cycles_run')}")
         emit(f"fig8_{name.lower()}_midsweep", 0,
              f"static_stranded={stt['in_flight']} "
              f"adaptive_stranded={adt['in_flight']}")
+        emit(f"fig8_{name.lower()}_watchdog", 0,
+             f"static_stalled_at={stt['stalled_at']} "
+             f"adaptive_stalled_at={adt['stalled_at']} "
+             f"cycles_run={wstats.get('cycles_run')}")
         emit(f"fig8_{name.lower()}", 0,
              f"worst_fault_frac={base.l_max / lmaxes.max():.3f}")
         emit(f"fig8_{name.lower()}_repair", t_repair * 1e6,

@@ -50,7 +50,14 @@ def main() -> int:
                          "(batched LP synthesis wall-clock, lambda vs "
                          "the Basu bound, routed l_max + saturation of "
                          "synthesized vs torus pods; --full adds the "
-                         "256-chip and 8^3 512-chip entries). Guarded "
+                         "256-chip and 8^3 512-chip entries) and "
+                         "BENCH_chaos.json (the guarded 8^3 chaos "
+                         "campaign: >= 20-event seeded fault/heal "
+                         "timeline wall-clock with per-event invariant "
+                         "checks, min served-pair fraction and the "
+                         "post-heal l_max ratio vs the cold build; "
+                         "--full adds netsim throughput probes along "
+                         "the timeline). Guarded "
                          "timings are medians of 3 repeats; regressions "
                          "past the per-guard bound vs the stored "
                          "baseline print a WARNING line")
@@ -67,16 +74,18 @@ def main() -> int:
               "baselines)")
         args.json = True
 
-    from benchmarks import (bench_netsim, bench_routing, bench_synthesis,
-                            fig1_smallgraphs, fig2_progress,
-                            fig3_analytical, fig5_saturation,
-                            fig6_collectives, fig7_traces, fig8_faults,
-                            fig9_routing_ablation, roofline)
+    from benchmarks import (bench_chaos, bench_netsim, bench_routing,
+                            bench_synthesis, fig1_smallgraphs,
+                            fig2_progress, fig3_analytical,
+                            fig5_saturation, fig6_collectives,
+                            fig7_traces, fig8_faults,
+                            fig9_routing_ablation, fig10_chaos, roofline)
     from benchmarks.common import REGRESSIONS
     root = Path(__file__).parent.parent
     netsim_json = root / "BENCH_netsim.json" if args.json else None
     routing_json = root / "BENCH_routing.json" if args.json else None
     synthesis_json = root / "BENCH_synthesis.json" if args.json else None
+    chaos_json = root / "BENCH_chaos.json" if args.json else None
     suites = [
         ("fig1_smallgraphs", fig1_smallgraphs.main),
         ("fig2_progress", fig2_progress.main),
@@ -86,6 +95,7 @@ def main() -> int:
         ("fig7_traces", fig7_traces.main),
         ("fig8_faults", fig8_faults.main),
         ("fig9_routing_ablation", fig9_routing_ablation.main),
+        ("fig10_chaos", fig10_chaos.main),
         ("roofline", roofline.main),
         ("bench_netsim",
          lambda full=False: bench_netsim.main(full, json_path=netsim_json)),
@@ -95,6 +105,8 @@ def main() -> int:
         ("bench_synthesis",
          lambda full=False: bench_synthesis.main(
              full, json_path=synthesis_json)),
+        ("bench_chaos",
+         lambda full=False: bench_chaos.main(full, json_path=chaos_json)),
     ]
     errors = []
     print("name,us_per_call,derived")

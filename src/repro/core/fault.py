@@ -90,7 +90,8 @@ class FaultSweepResult:
 
 
 def fault_sweep(topo: Topology, at: ATResult, K: int = 6, seed: int = 0,
-                repair_from: Optional[ServingState] = None
+                repair_from: Optional[ServingState] = None,
+                rng: Optional[np.random.Generator] = None
                 ) -> List[FaultSweepResult]:
     """Re-route under each single-OCS fault using the (robust) AT set.
 
@@ -100,6 +101,13 @@ def fault_sweep(topo: Topology, at: ATResult, K: int = 6, seed: int = 0,
     every flow against the masked AT -- each color independently, like
     the recompute mode. The per-fault :class:`RepairResult` rides on the
     sweep entries.
+
+    All randomness is explicit: pass one ``np.random.Generator`` as
+    ``rng`` and every per-color selection draws its seed from it (no
+    module-level RNG anywhere on the fault path), so a sweep replays
+    bit-identically from the generator's seed; with ``rng=None`` every
+    color uses the fixed ``seed`` (the legacy behaviour, equally
+    deterministic).
     """
     out = []
     for color in colors_in_use(topo):
@@ -114,7 +122,8 @@ def fault_sweep(topo: Topology, at: ATResult, K: int = 6, seed: int = 0,
             out.append(FaultSweepResult(color, routed,
                                         rr.unreachable == 0, repair=rr))
         else:
-            routed = select_paths(at, K=K, seed=seed, dead_channels=dead)
+            s = seed if rng is None else int(rng.integers(0, 2**31 - 1))
+            routed = select_paths(at, K=K, seed=s, dead_channels=dead)
             out.append(FaultSweepResult(color, routed,
                                         routed.unreachable == 0))
     return out

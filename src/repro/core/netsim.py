@@ -900,6 +900,13 @@ def sweep(tables: SimTables, rates: Sequence[float],
                + t.vc.astype(np.int64)).astype(np.int32)
         hptr = t.hop_indptr[:-1].astype(np.int32)
         lenm1 = (np.diff(t.hop_indptr) - 1).astype(np.int32)
+        if len(lenm1) and (lenm1 < 0).any():
+            raise ValueError(
+                "path table contains zero-length (lost) flow slots -- "
+                "the kernel samples traffic over flow slots and cannot "
+                "inject a packet with no route; compact a degraded "
+                "serving table first (CSRPathTable.compact() drops "
+                "lost pairs and remaps flow ids)")
         dstN = np.asarray(t.dst, np.int32)   # flow -> destination node
         route_bytes = pvf.nbytes + hptr.nbytes + lenm1.nbytes + dstN.nbytes
         args = (jnp.asarray(tables.ch_dst), jnp.asarray(pvf),

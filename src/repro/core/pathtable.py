@@ -301,15 +301,43 @@ class CSRPathTable:
         idx = self.hop_indptr[flows, None] + pos
         self.vc[idx[live]] = V[live].astype(np.int8)
 
+    def compact(self) -> Tuple["CSRPathTable", np.ndarray]:
+        """Drop zero-length (lost) flows; returns ``(table, kept)`` with
+        ``kept`` mapping new flow ids back to old ones.
+
+        Degraded-mode serving (:func:`repro.core.repair.repair_fault`
+        with ``on_disconnect="degrade"``) keeps disconnected pairs as
+        zero-length flow slots so flow ids stay stable across
+        fault/restore events. The simulator samples traffic over flow
+        slots and cannot inject a packet with no route, so throughput
+        probes of a degraded fabric run on the compacted table."""
+        lens = self.flow_len.astype(np.int64)
+        kept = np.nonzero(lens > 0)[0]
+        if len(kept) == len(lens):
+            return self.copy(), kept
+        src = self.flow_src.astype(np.int64)[kept]
+        src_indptr = np.searchsorted(src,
+                                     np.arange(self.n + 1)).astype(np.int64)
+        hop_indptr = np.zeros(len(kept) + 1, np.int64)
+        np.cumsum(lens[kept], out=hop_indptr[1:])
+        # zero-length flows contribute no hops, so the concatenated
+        # chan/vc arrays are already exactly the compacted ones
+        return CSRPathTable(self.n, self.n_ch, self.n_vc, src_indptr,
+                            self.dst[kept].copy(), hop_indptr,
+                            self.chan.copy(), self.vc.copy()), kept
+
     # ---- vectorised statistics (PathTable API parity) ---------------------
 
     def routed_mask(self) -> np.ndarray:
         m = np.zeros((self.n, self.n), bool)
-        m[self.flow_src, self.dst] = True
+        live = self.flow_len > 0
+        m[self.flow_src[live], self.dst[live]] = True
         return m
 
     def n_routed(self) -> int:
-        return self.n_flows
+        """Flows with an actual route -- zero-length (lost) flow slots
+        kept by degraded-mode serving don't count as routed."""
+        return int((self.flow_len > 0).sum())
 
     def nbytes(self) -> int:
         """Bytes held by the packed CSR arrays (O(total routed hops))."""
@@ -327,6 +355,7 @@ class CSRPathTable:
 
     def avg_hops(self) -> float:
         lens = self.flow_len
+        lens = lens[lens > 0]
         return float(lens.mean()) if len(lens) else 0.0
 
     def vc_hop_counts(self) -> np.ndarray:

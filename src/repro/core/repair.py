@@ -46,8 +46,27 @@ carrying per-stage wall-clock, the re-routed flow count and the
 post-repair ``l_max``; the repaired state is reachability- and
 deadlock-equivalent to a full recompute on the faulted fabric (the
 oracle `full_recompute` runs the whole selection + allocation from
-scratch in the same channel-id space, and is also the fallback when
-repair cannot restore reachability).
+scratch in the same channel-id space).
+
+**Degraded mode** (default): when a fault genuinely disconnects some
+pairs, the state keeps serving every reachable pair instead of giving
+up. Lost pairs keep their flow slot with a zero-length path -- flow ids
+stay stable across the whole fault/heal timeline -- and accumulate in
+``ServingState.lost``; every invariant (loads, VC counts, deadlock
+freedom, untouched-flow bit-identity) holds over the reachable subset.
+``repair_fault(..., on_disconnect="recompute")`` restores the legacy
+behaviour of falling back to a cold re-selection (which renumbers
+flows, since unreachable pairs get no flow entry).
+
+**Restoration** (:func:`restore_channels`) is the inverse walk: revived
+channels re-enter turn admission incrementally -- partial heals resume
+the batched engine over the saved snapshot (:func:`_readmit`), a full
+heal swaps back the pristine cold admission kept on
+``ServingState.at0`` for exact pre-fault recovery -- then previously
+lost pairs re-route and, with ``rebalance=True``, every flow detoured
+during the fault epoch (``ServingState.touched``) re-routes against
+fresh exact distances so the healed fabric's ``l_max`` lands within a
+few percent of a cold rebuild.
 """
 from __future__ import annotations
 
@@ -66,7 +85,7 @@ from repro.core.routing import (ATResult, RoutingResult, _BatchedDAG,
                                 select_paths)
 from repro.core.topology import Topology
 from repro.core.vcalloc import allocate_vcs, reallocate_vcs, \
-    verify_deadlock_free
+    verify_deadlock_free, verify_flows_deadlock_free
 
 
 class _LazyAllowed:
@@ -117,6 +136,15 @@ class ServingState:
     far (sorted). States share ``dist``/``best`` read-only across a
     repair chain; a repair copies them before writing back refreshed
     rows (copy-on-write).
+
+    ``lost`` holds the flow ids currently unroutable (degraded mode --
+    their table slots are zero-length so flow ids never shift);
+    ``touched`` accumulates every flow re-routed since the cold build
+    (the set :func:`restore_channels` rebalances after a heal, and the
+    only flows that may ride turns re-admitted mid-fault). ``at0``
+    keeps the pristine cold-build ATResult: repairs never mutate it
+    (pruning copies the admission snapshot), so a full heal can restore
+    the exact pre-fault allowed set instead of replaying admission.
     """
     topo: Topology
     at: ATResult
@@ -129,6 +157,15 @@ class ServingState:
     K: int
     seed: int
     stats: Optional[dict] = None
+    lost: Optional[np.ndarray] = None      # sorted int64 lost flow ids
+    touched: Optional[np.ndarray] = None   # sorted int64 re-routed flows
+    at0: Optional[ATResult] = None         # pristine cold-build AT
+
+    def __post_init__(self) -> None:
+        if self.lost is None:
+            self.lost = np.zeros(0, np.int64)
+        if self.touched is None:
+            self.touched = np.zeros(0, np.int64)
 
     @staticmethod
     def build(topo: Topology, n_vc: int = 4, K: int = 8, seed: int = 0,
@@ -149,19 +186,30 @@ class ServingState:
         loads[:ch.n] = routed.loads.astype(np.int64)
         return ServingState(topo, at, routed.table, loads, counts,
                             np.zeros(0, np.int64), dist, best, K, seed,
-                            stats=routed.stats)
+                            stats=routed.stats, at0=at)
 
     @property
     def l_max(self) -> float:
         return float(self.loads[:-1].max()) if len(self.loads) > 1 else 0.0
 
+    @property
+    def served_fraction(self) -> float:
+        """Fraction of the fabric's flow slots currently routable --
+        the availability metric a chaos campaign tracks over time."""
+        F = self.table.n_flows
+        return 1.0 if F == 0 else 1.0 - len(self.lost) / F
+
 
 @dataclasses.dataclass
 class RepairResult:
-    """Outcome of one :func:`repair_fault` call. ``stats`` carries the
-    per-stage wall-clock (``prune_s``, ``walk_s``, ``bfs_s``,
-    ``readmit_s``, ``greedy_s``, ``refine_s``, ``vc_s``, ``verify_s``,
-    ``total_s``) plus pool/residual sizes."""
+    """Outcome of one :func:`repair_fault` / :func:`restore_channels`
+    call. ``stats`` carries the per-stage wall-clock (``prune_s``,
+    ``walk_s``, ``bfs_s``, ``readmit_s``, ``greedy_s``, ``refine_s``,
+    ``vc_s``, ``verify_s``, ``total_s``) plus pool/residual sizes; it
+    is JSON-serialised by the benchmark lanes, so everything in it
+    stays scalar. The re-routed flow-id pool rides separately on
+    ``pool_flows`` (the complement is the untouched set whose paths
+    must be bit-identical to the pre-event table)."""
     state: ServingState
     flows_rerouted: int
     l_max: float
@@ -170,6 +218,9 @@ class RepairResult:
     fallback: bool             # repair gave up -> full re-selection
     readmitted: int            # turns re-admitted by the delta admission
     stats: dict
+    lost: int = 0              # flow slots unroutable after this event
+    restored: int = 0          # channels revived (restore events only)
+    pool_flows: Optional[np.ndarray] = None   # re-routed flow ids
 
 
 def _pruned_at(at: ATResult, dead_mask: np.ndarray) -> ATResult:
@@ -197,6 +248,39 @@ def _pruned_at(at: ATResult, dead_mask: np.ndarray) -> ATResult:
             "dead_turn": adm["dead_turn"] | turn_dead}
     stats = {"engine": "repair-pruned",
              "pruned_turn_cells": int((adm["acc"] & ~acc2).sum()),
+             "allowed": len(edges)}
+    return ATResult(at.channels, n_vc, _LazyAllowed(edges, n_vc),
+                    trees=at.trees, stats=stats, _edges=edges,
+                    _admission=adm2)
+
+
+def _revived_at(at: ATResult, dead_mask: np.ndarray) -> ATResult:
+    """Delta admission for a *partial* heal: recompute the dead-turn
+    mask from the (smaller) surviving dead set, keep the accepted grid
+    as is. A revived turn is NOT auto-re-accepted -- it was admitted
+    against a DAG that has since changed -- it re-enters through
+    :func:`_readmit`'s resumed batched admission under the saved level
+    numbering, which guarantees the result stays acyclic."""
+    adm = at._admission
+    if adm is None:
+        raise ValueError("restore requires an ATResult from the batched "
+                         "admission engine (at_engine='batched'); the "
+                         "reference engine keeps no admission snapshot")
+    n_vc = at.n_vc
+    turns, vo = adm["turns"], adm["vo"]
+    cin = turns[:, 0].astype(np.int64)
+    cout = turns[:, 1].astype(np.int64)
+    turn_dead = dead_mask[cin] | dead_mask[cout]
+    acc2 = adm["acc"].copy()    # accepted turns avoid the old dead set,
+    tr, tv = np.nonzero(acc2)   # a superset of the healed one
+    edges = np.stack([cin[tr] * n_vc + vo[tv, 0],
+                      cout[tr] * n_vc + vo[tv, 1]], axis=1)
+    adm2 = {"level": adm["level"].copy(), "acc": acc2, "turns": turns,
+            "vo": vo, "perm": adm["perm"], "cap_out": adm["cap_out"],
+            "dead_turn": turn_dead}
+    stats = {"engine": "repair-restored",
+             "revived_turn_cells": int((adm["dead_turn"]
+                                        & ~turn_dead).sum()),
              "allowed": len(edges)}
     return ATResult(at.channels, n_vc, _LazyAllowed(edges, n_vc),
                     trees=at.trees, stats=stats, _edges=edges,
@@ -361,10 +445,83 @@ def _validated_dead(dead_channels, n_ch: int) -> np.ndarray:
     return dc
 
 
+def _greedy_assign(loads: np.ndarray, cand: np.ndarray, kv: np.ndarray,
+                   routable: np.ndarray, rng, SEN: int, BIG: np.int64,
+                   block: int) -> np.ndarray:
+    """Blockwise min-max greedy over a random pool order against the
+    live background loads: each flow takes the candidate minimising
+    (max load along path, sum of loads) lexicographically, committing
+    its load before the next block. Returns per-pool-row chosen slot
+    ids; mutates ``loads`` in place (sentinel slot kept at 0)."""
+    pchosen = np.zeros(len(kv), np.int64)
+    order = rng.permutation(routable)
+    for i in range(0, len(order), block):
+        idx = order[i:i + block]
+        bc = cand[idx]
+        l = loads[bc]
+        cost = l.max(axis=2) * BIG + l.sum(axis=2)
+        cost[~kv[idx]] = np.iinfo(np.int64).max
+        c = cost.argmin(axis=1)
+        pchosen[idx] = c
+        np.add.at(loads, bc[np.arange(len(idx)), c].ravel(), 1)
+        loads[SEN] = 0
+    return pchosen
+
+
+def _rebuild_table(table: CSRPathTable, pool: np.ndarray,
+                   pool_hop_idx: np.ndarray, plens: np.ndarray,
+                   kv: np.ndarray, cand: np.ndarray, vcs: np.ndarray,
+                   pchosen: np.ndarray, SEN: int) -> CSRPathTable:
+    """Rebuild the CSR arrays after a pool re-route: untouched flows
+    shift in place via one cumsum/scatter (byte-identical hops),
+    pooled flows scatter their winning candidate, unroutable pool
+    flows come back as zero-length (lost) slots."""
+    F = table.n_flows
+    flen_all = table.flow_len.astype(np.int64)
+    routable = np.nonzero(kv.any(axis=1))[0]
+    flen2 = flen_all.copy()
+    flen2[pool] = plens
+    flen2[pool[~kv.any(axis=1)]] = 0
+    hop_indptr2 = np.zeros(F + 1, np.int64)
+    np.cumsum(flen2, out=hop_indptr2[1:])
+    chan2 = np.full(int(hop_indptr2[-1]), SEN, np.int32)
+    vc2 = np.zeros(int(hop_indptr2[-1]), np.int8)
+    keep = np.ones(len(table.chan), bool)
+    keep[pool_hop_idx] = False
+    shift = hop_indptr2[:-1] - table.hop_indptr[:-1]
+    new_pos = (np.arange(len(table.chan), dtype=np.int64)
+               + np.repeat(shift, flen_all))[keep]
+    chan2[new_pos] = table.chan[keep]
+    vc2[new_pos] = table.vc[keep]
+    if len(routable):
+        rp = pool[routable]
+        sel = cand[routable, pchosen[routable]]
+        selvc = vcs[routable, pchosen[routable]]
+        pos = np.arange(cand.shape[2])[None, :]
+        live = pos < plens[routable][:, None]
+        flat = (hop_indptr2[rp][:, None] + pos)[live]
+        chan2[flat] = sel[live]
+        vc2[flat] = selvc[live]
+    return CSRPathTable(table.n, table.n_ch, table.n_vc,
+                        table.src_indptr.copy(), table.dst.copy(),
+                        hop_indptr2, chan2, vc2)
+
+
+def _pool_hop_ranges(table: CSRPathTable,
+                     pool: np.ndarray) -> np.ndarray:
+    """Ragged hop index ranges of just the pool flows (~pool * avg hops
+    entries, not all hops)."""
+    plen = table.flow_len.astype(np.int64)[pool]
+    return np.repeat(
+        table.hop_indptr[pool] - (np.cumsum(plen) - plen), plen) \
+        + np.arange(int(plen.sum()), dtype=np.int64)
+
+
 def repair_fault(state: ServingState, dead_channels,
                  local_search_rounds: int = 1, refine_block: int = 192,
                  readmit: str = "auto", verify: str = "pool",
-                 block: int = 4096, bfs_chunk: int = 1024) -> RepairResult:
+                 block: int = 4096, bfs_chunk: int = 1024,
+                 on_disconnect: str = "degrade") -> RepairResult:
     """Incrementally repair a live :class:`ServingState` after
     ``dead_channels`` fail. Pure: the input state (its AT, table, loads,
     stores) is never mutated; the repaired state comes back on the
@@ -380,10 +537,20 @@ def repair_fault(state: ServingState, dead_channels,
     reachability (``"never"`` disables it, ``"always"`` forces one
     pass). ``verify="pool"`` re-verifies the turns of re-routed flows
     only -- untouched flows keep using surviving turns by construction
-    -- while ``"full"`` re-checks the whole table. Falls back to a full
-    re-selection (:func:`full_recompute`) when repair cannot restore
-    reachability that the pruned AT supports.
+    -- while ``"full"`` re-checks the whole table.
+
+    ``on_disconnect`` picks the genuine-disconnection policy:
+    ``"degrade"`` (default) serves every reachable pair and parks the
+    disconnected ones as zero-length flow slots in
+    ``ServingState.lost`` (flow ids stay stable; a later
+    :func:`restore_channels` re-routes them); ``"recompute"`` falls
+    back to a full re-selection on the pruned AT (legacy behaviour --
+    flow ids shift because unreachable pairs get no flow entry, so the
+    lost/touched bookkeeping resets).
     """
+    if on_disconnect not in ("degrade", "recompute"):
+        raise ValueError(f"on_disconnect must be 'degrade' or "
+                         f"'recompute', got {on_disconnect!r}")
     t_all = time.time()
     stats: dict = {}
     at = state.at
@@ -436,12 +603,7 @@ def repair_fault(state: ServingState, dead_channels,
     if len(pool):
         src_all = table.flow_src.astype(np.int64)
         psrc, pdst = src_all[pool], table.dst[pool].astype(np.int64)
-        # ragged hop index ranges of just the pool flows (~pool * avg
-        # hops entries, not all hops)
-        plen = flen_all[pool]
-        pool_hop_idx = np.repeat(
-            table.hop_indptr[pool] - (np.cumsum(plen) - plen), plen) \
-            + np.arange(int(plen.sum()), dtype=np.int64)
+        pool_hop_idx = _pool_hop_ranges(table, pool)
         loads[:SEN] -= np.bincount(table.chan[pool_hop_idx],
                                    minlength=SEN)
         loads[SEN] = 0
@@ -502,31 +664,20 @@ def repair_fault(state: ServingState, dead_channels,
             residual = residual[~rkv.any(axis=1)]
         unreachable = int(len(residual))
 
-        if unreachable and readmit != "never":
-            # the pruned AT (even after re-admission) cannot route some
-            # pooled flow along stored/exact fields: give up on the
-            # incremental path and re-select everything on at2
+        if unreachable and readmit != "never" \
+                and on_disconnect == "recompute":
+            # legacy policy: the pruned AT (even after re-admission)
+            # cannot route some pooled flow along stored/exact fields --
+            # give up on the incremental path, re-select everything
             fallback = True
         else:
             routable = np.nonzero(kv.any(axis=1))[0]
-            pchosen = np.zeros(len(pool), np.int64)
             # same min-max tie-break base as the selection engines:
             # strictly larger than any sum-of-loads along one path
             BIG = np.int64(F) * max(int(flen_all.max()), 1) + 1
-            # blockwise greedy over a random pool order against the
-            # live background loads
             t0 = time.time()
-            order = rng.permutation(routable)
-            for i in range(0, len(order), block):
-                idx = order[i:i + block]
-                bc = cand[idx]
-                l = loads[bc]
-                cost = l.max(axis=2) * BIG + l.sum(axis=2)
-                cost[~kv[idx]] = np.iinfo(np.int64).max
-                c = cost.argmin(axis=1)
-                pchosen[idx] = c
-                np.add.at(loads, bc[np.arange(len(idx)), c].ravel(), 1)
-                loads[SEN] = 0
+            pchosen = _greedy_assign(loads, cand, kv, routable, rng,
+                                     SEN, BIG, block)
             t_greedy += time.time() - t0
             # the sharded engine's refinement primitive over the pool
             t0 = time.time()
@@ -538,36 +689,8 @@ def repair_fault(state: ServingState, dead_channels,
                     local_search_rounds, refine_block, lm_before)
                 pchosen[routable] = sub_chosen
             t_refine += time.time() - t0
-
-            # rebuild the CSR arrays: untouched flows shift in place,
-            # pooled flows scatter their winning candidate
-            flen2 = flen_all.copy()
-            flen2[pool] = plens
-            flen2[pool[~kv.any(axis=1)]] = 0
-            hop_indptr2 = np.zeros(F + 1, np.int64)
-            np.cumsum(flen2, out=hop_indptr2[1:])
-            chan2 = np.full(int(hop_indptr2[-1]), SEN, np.int32)
-            vc2 = np.zeros(int(hop_indptr2[-1]), np.int8)
-            keep = np.ones(len(table.chan), bool)
-            keep[pool_hop_idx] = False
-            shift = hop_indptr2[:-1] - table.hop_indptr[:-1]
-            new_pos = (np.arange(len(table.chan), dtype=np.int64)
-                       + np.repeat(shift, flen_all))[keep]
-            chan2[new_pos] = table.chan[keep]
-            vc2[new_pos] = table.vc[keep]
-            if len(routable):
-                rp = pool[routable]
-                sel = cand[routable, pchosen[routable]]
-                selvc = vcs[routable, pchosen[routable]]
-                pos = np.arange(cand.shape[2])[None, :]
-                live = pos < plens[routable][:, None]
-                flat = (hop_indptr2[rp][:, None] + pos)[live]
-                chan2[flat] = sel[live]
-                vc2[flat] = selvc[live]
-            table = CSRPathTable(table.n, table.n_ch, table.n_vc,
-                                 table.src_indptr.copy(),
-                                 table.dst.copy(), hop_indptr2, chan2,
-                                 vc2)
+            table = _rebuild_table(table, pool, pool_hop_idx, plens,
+                                   kv, cand, vcs, pchosen, SEN)
     else:
         stats["residual"] = 0
         table = state.table.copy()
@@ -587,15 +710,14 @@ def repair_fault(state: ServingState, dead_channels,
     elif len(pool):
         # ---- stage C: streamed VC re-repair over the pool -----------------
         t0 = time.time()
-        realloc = pool[np.diff(table.hop_indptr)[pool] > 0]
-        counts = reallocate_vcs(at2, table, realloc, counts)
+        counts = reallocate_vcs(at2, table, pool, counts)
         t_vc += time.time() - t0
 
     t0 = time.time()
     if verify == "full" or fallback:
         deadlock_free = verify_deadlock_free(at2, table)
     elif len(pool):
-        deadlock_free = _verify_flows(at2, table, pool)
+        deadlock_free = verify_flows_deadlock_free(at2, table, pool)
     else:
         deadlock_free = True
     stats["verify_s"] = round(time.time() - t0, 3)
@@ -607,31 +729,190 @@ def repair_fault(state: ServingState, dead_channels,
                   "vc_s": round(t_vc, 3)})
     if not store_copied and not fallback:
         dist_store, best_store = state.dist, state.best
+    if fallback:
+        # the fallback re-selection renumbers flows (unreachable pairs
+        # get no entry), so the flow-id bookkeeping resets
+        lost2 = np.zeros(0, np.int64)
+        touched2 = np.zeros(0, np.int64)
+    elif len(pool):
+        routable_m = kv.any(axis=1)
+        lost2 = np.union1d(state.lost, pool[~routable_m])
+        touched2 = np.union1d(state.touched, pool[routable_m])
+    else:
+        lost2, touched2 = state.lost, state.touched
+    stats["lost"] = int(len(lost2))
     new_state = ServingState(state.topo, at2, table, loads, counts,
                              dead_all, dist_store, best_store, K,
-                             state.seed, stats=state.stats)
+                             state.seed, stats=state.stats, lost=lost2,
+                             touched=touched2, at0=state.at0)
     stats["total_s"] = round(time.time() - t_all, 3)
     return RepairResult(new_state, flows_rerouted=len(pool),
                         l_max=float(loads[:SEN].max()),
                         unreachable=unreachable,
                         deadlock_free=bool(deadlock_free),
                         fallback=fallback, readmitted=readmitted,
-                        stats=stats)
+                        stats=stats, lost=int(len(lost2)),
+                        pool_flows=pool)
 
 
-def _verify_flows(at2: ATResult, table: CSRPathTable,
-                  flows: np.ndarray) -> bool:
-    """Deadlock-freedom check restricted to ``flows``: every consecutive
-    (channel, vc) hop must be an allowed turn of the pruned set.
-    Untouched flows need no re-check -- their paths cross no dead
-    channel, so every turn they use survives pruning verbatim."""
-    sg = at2.state_graph()
-    P, V, lens = table.gather_paths(flows)
-    if P.shape[1] < 2:
-        return True
-    s = P * at2.n_vc + V
-    m = np.arange(P.shape[1] - 1)[None, :] < (lens - 1)[:, None]
-    return bool(sg.has_edges(s[:, :-1][m], s[:, 1:][m]).all())
+def restore_channels(state: ServingState, channels, rebalance: bool = True,
+                     local_search_rounds: int = 1, refine_block: int = 192,
+                     verify: str = "pool", block: int = 4096,
+                     bfs_chunk: int = 1024) -> RepairResult:
+    """Heal a live :class:`ServingState` after ``channels`` come back --
+    the inverse of :func:`repair_fault`. Pure like the repair: the
+    input state is never mutated.
+
+    Revived turns re-enter admission incrementally: a *partial* heal
+    rebuilds the dead-turn mask from the surviving dead set and resumes
+    the batched engine over the saved snapshot (:func:`_readmit`, saved
+    level numbering, acyclic by construction); a *full* heal (nothing
+    left dead) swaps back the pristine cold admission kept on
+    ``ServingState.at0`` -- the exact pre-fault allowed set, so
+    reachability recovery is exact by construction, with no replay.
+
+    The re-route pool is ``state.lost`` (pairs parked by degraded-mode
+    repairs -- they re-route against fresh exact distances) plus, with
+    ``rebalance=True``, ``state.touched``: every flow detoured during
+    the fault epoch re-routes so load concentrated on detours relaxes
+    back toward a cold rebuild's balance. On a full heal the touched
+    set is pooled regardless -- those are the only flows that can ride
+    turns re-admitted mid-fault, which the pristine admission does not
+    contain. Untouched flows stay byte-identical.
+
+    Channels not currently dead are counted in ``stats["not_dead"]``
+    and ignored; out-of-range ids raise ``ValueError``.
+    """
+    t_all = time.time()
+    stats: dict = {}
+    at = state.at
+    ch = at.channels
+    n, n_vc = ch.n_nodes, at.n_vc
+    SEN = ch.n
+    K = state.K
+    dc = _validated_dead(channels, SEN)
+    revived = np.intersect1d(dc, state.dead)
+    stats["not_dead"] = int(len(dc) - len(revived))
+    dead_all = np.setdiff1d(state.dead, revived)
+    dead_mask = np.zeros(SEN, bool)
+    dead_mask[dead_all] = True
+    dead_state = (dead_all[:, None] * n_vc
+                  + np.arange(n_vc)).ravel() if len(dead_all) else \
+        np.zeros(0, np.int64)
+    full_heal = len(dead_all) == 0 and state.at0 is not None
+
+    # ---- stage A: delta re-admission over the healed fabric ---------------
+    t0 = time.time()
+    readmitted = 0
+    if not len(revived):
+        at2 = at
+    elif full_heal:
+        at2 = state.at0
+        stats["exact_heal"] = True
+    else:
+        at2 = _revived_at(at, dead_mask)
+        readmitted = _readmit(at2)
+    stats["readmit_s"] = round(time.time() - t0, 3)
+
+    table = state.table
+    F = table.n_flows
+    flen_all = table.flow_len.astype(np.int64)
+    pool = state.lost
+    if rebalance or full_heal:
+        pool = np.union1d(pool, state.touched)
+    pool = pool.astype(np.int64)
+    stats["pool"] = len(pool)
+    stats["lost_before"] = int(len(state.lost))
+    loads = state.loads.copy()
+    counts = state.vc_counts.copy()
+    dist_store, best_store = state.dist, state.best
+    unreachable = 0
+    t_walk = t_bfs = t_greedy = t_refine = t_vc = 0.0
+    rng = np.random.default_rng(state.seed)
+    lost2, touched2 = state.lost, state.touched
+
+    if len(pool):
+        src_all = table.flow_src.astype(np.int64)
+        psrc, pdst = src_all[pool], table.dst[pool].astype(np.int64)
+        pool_hop_idx = _pool_hop_ranges(table, pool)
+        loads[:SEN] -= np.bincount(table.chan[pool_hop_idx],
+                                   minlength=SEN)
+        loads[SEN] = 0
+        counts = counts - np.bincount(
+            table.vc[pool_hop_idx].astype(np.int64), minlength=n_vc)
+
+        # exact distance refresh for every pooled source: the stored
+        # fields reflect the faulted fabric, and stale distances are
+        # only sound on a *subgraph* -- healing grows the graph, so the
+        # lost/touched walks need fresh exact BFS rows (copy-on-write)
+        t0 = time.time()
+        rsrcs = np.unique(psrc)
+        dist_store = dist_store.copy()
+        best_store = best_store.copy()
+        d = _exact_bfs(at2, rsrcs, dead_all, chunk=bfs_chunk)
+        b = node_distances(at2, rsrcs, dist=d)
+        dist_store[rsrcs] = d.astype(np.int8)
+        best_store[rsrcs] = b.astype(np.int16)
+        t_bfs += time.time() - t0
+
+        t0 = time.time()
+        cand, vcs, kv, plens = _walk_pool_chunked(
+            at2, dist_store, best_store, dead_state, psrc, pdst, K)
+        t_walk += time.time() - t0
+        routable_m = kv.any(axis=1)
+        unreachable = int((~routable_m).sum())
+        routable = np.nonzero(routable_m)[0]
+        BIG = np.int64(F) * max(int(flen_all.max()),
+                                int(plens.max(initial=1)), 1) + 1
+        t0 = time.time()
+        pchosen = _greedy_assign(loads, cand, kv, routable, rng, SEN,
+                                 BIG, block)
+        t_greedy += time.time() - t0
+        t0 = time.time()
+        if local_search_rounds > 0 and len(routable):
+            lm_before = int(loads[:SEN].max())
+            loads, sub_chosen = _refine_candidates(
+                loads, cand[routable], kv[routable],
+                pchosen[routable].copy(), rng, SEN, BIG,
+                local_search_rounds, refine_block, lm_before)
+            pchosen[routable] = sub_chosen
+        t_refine += time.time() - t0
+        table = _rebuild_table(table, pool, pool_hop_idx, plens, kv,
+                               cand, vcs, pchosen, SEN)
+        # ---- stage C: streamed VC re-allocation over the pool -------------
+        t0 = time.time()
+        counts = reallocate_vcs(at2, table, pool, counts)
+        t_vc += time.time() - t0
+        lost2 = pool[~routable_m]
+        touched2 = np.union1d(state.touched, pool[routable_m])
+    else:
+        table = state.table.copy()
+
+    t0 = time.time()
+    if verify == "full":
+        deadlock_free = verify_deadlock_free(at2, table)
+    elif len(pool):
+        deadlock_free = verify_flows_deadlock_free(at2, table, pool)
+    else:
+        deadlock_free = True
+    stats["verify_s"] = round(time.time() - t0, 3)
+
+    stats.update({"walk_s": round(t_walk, 3), "bfs_s": round(t_bfs, 3),
+                  "greedy_s": round(t_greedy, 3),
+                  "refine_s": round(t_refine, 3),
+                  "vc_s": round(t_vc, 3), "lost": int(len(lost2))})
+    new_state = ServingState(state.topo, at2, table, loads, counts,
+                             dead_all, dist_store, best_store, K,
+                             state.seed, stats=state.stats, lost=lost2,
+                             touched=touched2, at0=state.at0)
+    stats["total_s"] = round(time.time() - t_all, 3)
+    return RepairResult(new_state, flows_rerouted=len(pool),
+                        l_max=float(loads[:SEN].max()),
+                        unreachable=unreachable,
+                        deadlock_free=bool(deadlock_free),
+                        fallback=False, readmitted=readmitted,
+                        stats=stats, lost=int(len(lost2)),
+                        restored=int(len(revived)), pool_flows=pool)
 
 
 def full_recompute(state: ServingState, dead_channels=None

@@ -346,6 +346,10 @@ def reallocate_vcs(at: ATResult, table: CSRPathTable, flows: np.ndarray,
     updated in place and returned.
     """
     flows = np.asarray(flows, np.int64)
+    # zero-length (lost) flow slots have no hops to assign; tolerate
+    # them so degraded-mode callers can pass a raw pool
+    flows = flows[(table.hop_indptr[flows + 1]
+                   - table.hop_indptr[flows]) > 0]
     n_vc = at.n_vc
     F = len(flows)
     if F == 0:
@@ -362,6 +366,23 @@ def reallocate_vcs(at: ATResult, table: CSRPathTable, flows: np.ndarray,
         table.set_flow_vcs(sub, V, lens)
         counts += np.bincount(V[live], minlength=n_vc)
     return counts
+
+
+def verify_flows_deadlock_free(at: ATResult, table: CSRPathTable,
+                               flows: np.ndarray) -> bool:
+    """Deadlock-freedom check restricted to ``flows``: every consecutive
+    (channel, vc) hop must be an allowed turn. The repair/restore paths
+    use it pool-scoped -- untouched flows need no re-check because their
+    paths cross no dead channel, so every turn they use survives pruning
+    verbatim. Zero-length (lost) flows contribute no hop pairs and pass
+    vacuously."""
+    sg = at.state_graph()
+    P, V, lens = table.gather_paths(flows)
+    if P.shape[1] < 2:
+        return True
+    s = P * at.n_vc + V
+    m = np.arange(P.shape[1] - 1)[None, :] < (lens - 1)[:, None]
+    return bool(sg.has_edges(s[:, :-1][m], s[:, 1:][m]).all())
 
 
 def verify_deadlock_free(at: ATResult,

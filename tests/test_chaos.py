@@ -1,0 +1,283 @@
+"""Chaos campaign engine suite (`repro.core.chaos`): seeded schedules
+replay bit-identically, campaigns keep every machine-checked invariant
+green at every event (reachability accounting, deadlock freedom,
+load/VC consistency, untouched-flow bit-identity, no dead channel
+served), disconnections serve degraded without a cold recompute, and
+fault->restore round trips recover pre-fault reachability exactly with
+post-heal l_max within 1.10x of the cold build. The randomized
+fault/restore property test runs under Hypothesis when available and
+falls back to fixed seeds otherwise."""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core import chaos as X, fault as F, topology as T
+from repro.core.repair import ServingState, repair_fault, restore_channels
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+L_MAX_BOUND = 1.10
+
+
+@pytest.fixture(scope="module")
+def served():
+    topo = T.pdtt((4, 4, 4))
+    return topo, ServingState.build(topo, n_vc=4, K=8, seed=0,
+                                    robust=True)
+
+
+@functools.lru_cache(maxsize=1)
+def _prop_state():
+    # smaller build for the many-example property test (pure state --
+    # repairs never mutate it, so one build serves every example)
+    topo = T.pdtt((4, 4, 4))
+    return ServingState.build(topo, n_vc=2, K=4, seed=0, robust=True)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_deterministic_and_well_formed(served):
+    topo, st = served
+    a = X.generate_schedule(st.at, n_arrivals=14, seed=11)
+    b = X.generate_schedule(st.at, n_arrivals=14, seed=11)
+    assert a.n_events == b.n_events
+    for ea, eb in zip(a.events, b.events):
+        assert (ea.t, ea.kind, ea.colors) == (eb.t, eb.kind, eb.colors)
+        np.testing.assert_array_equal(ea.channels, eb.channels)
+    # a different seed samples a different timeline
+    c = X.generate_schedule(st.at, n_arrivals=14, seed=12)
+    assert [e.t for e in c.events] != [e.t for e in a.events]
+    # well-formed: faults only kill live channels, restores only revive
+    # dead ones, and events arrive in time order
+    ts = [e.t for e in a.events]
+    assert ts == sorted(ts)
+    dead = np.zeros(0, np.int64)
+    for e in a.events:
+        if e.kind == "restore":
+            assert len(np.setdiff1d(e.channels, dead)) == 0
+            dead = np.setdiff1d(dead, e.channels)
+        else:
+            dead = np.union1d(dead, e.channels)
+    assert len(dead) == 0, "final_heal must close the timeline"
+
+
+def test_schedule_coverage_guarantees(served):
+    topo, st = served
+    sched = X.generate_schedule(st.at, n_arrivals=12, seed=5)
+    kinds = sched.kinds()
+    assert kinds.get("restore", 0) >= 1          # final heal at least
+    # the forced isolate is a links event killing a full incident set
+    ch = st.at.channels
+    isolating = False
+    for e in sched.events:
+        if e.kind != "links":
+            continue
+        for node in np.unique(np.concatenate(
+                [ch.src[e.channels], ch.dst[e.channels]])):
+            inc = np.nonzero((ch.src == node) | (ch.dst == node))[0]
+            if len(np.setdiff1d(inc, e.channels)) == 0:
+                isolating = True
+    assert isolating, "ensure_coverage must force a node isolation"
+
+
+# ---------------------------------------------------------------------------
+# degraded mode + restoration round trips
+# ---------------------------------------------------------------------------
+
+
+def test_fault_restore_roundtrip_exact(served):
+    topo, st = served
+    color = F.colors_in_use(topo)[0]
+    dead = F.dead_channels_for_color(st.at, color)
+    rr = repair_fault(st, dead, verify="full")
+    heal = restore_channels(rr.state, dead, verify="full")
+    assert heal.restored == len(dead)
+    assert len(heal.state.dead) == 0
+    assert len(heal.state.lost) == 0
+    # pre-fault reachability recovered exactly, quality within bound of
+    # the cold build (the full-recompute oracle on the healed fabric)
+    assert heal.state.table.n_routed() == topo.n * (topo.n - 1)
+    assert heal.l_max <= st.l_max * L_MAX_BOUND, (heal.l_max, st.l_max)
+    inv = X.check_invariants(rr.state, heal)
+    assert all(inv.values()), inv
+
+
+def test_partial_restore_keeps_remaining_fault(served):
+    topo, st = served
+    colors = F.colors_in_use(topo)[:2]
+    d0 = F.dead_channels_for_color(st.at, colors[0])
+    d1 = F.dead_channels_for_color(st.at, colors[1])
+    both = repair_fault(repair_fault(st, d0).state, d1)
+    heal = restore_channels(both.state, d0, verify="full")
+    np.testing.assert_array_equal(heal.state.dead, np.sort(d1))
+    # the healed table must not touch the still-dead channels
+    m = np.zeros(st.at.channels.n, bool)
+    m[d1] = True
+    assert not m[heal.state.table.chan].any()
+    inv = X.check_invariants(both.state, heal)
+    assert all(inv.values()), inv
+
+
+def test_restore_rejects_unknown_and_ignores_live(served):
+    topo, st = served
+    with pytest.raises(ValueError, match="unknown channel ids"):
+        restore_channels(st, [st.at.channels.n + 3])
+    rr = restore_channels(st, [0, 1])   # nothing dead: no-op
+    assert rr.restored == 0
+    assert rr.flows_rerouted == 0
+    np.testing.assert_array_equal(rr.state.table.chan, st.table.chan)
+
+
+def test_degraded_probe_compacts_lost_pairs(served):
+    topo, st = served
+    ch = st.at.channels
+    dead = np.nonzero((ch.src == 0) | (ch.dst == 0))[0].astype(np.int64)
+    rr = repair_fault(st, dead)
+    assert rr.lost == 2 * (topo.n - 1) and not rr.fallback
+    probe = X.probe_throughput(rr.state, rate=0.05, cycles=600,
+                               warmup=200)
+    assert probe["served_flows"] == topo.n * (topo.n - 1) - rr.lost
+    assert probe["delivered"] > 0.0
+    assert probe["cycles_run"] > 0
+
+
+# ---------------------------------------------------------------------------
+# campaigns
+# ---------------------------------------------------------------------------
+
+
+def test_campaign_full_contract_small(served):
+    topo, st = served
+    sched = X.generate_schedule(st.at, n_arrivals=12, seed=5)
+    res = X.run_campaign(st, sched, coalesce=1.0)
+    assert res.ok, [r.invariants for r in res.records if not r.ok]
+    assert not any(r.fallback for r in res.records)
+    # degraded-mode event served without a cold recompute
+    assert any(r.lost_pairs > 0 for r in res.records)
+    assert any(r.kind == "restore" for r in res.records)
+    # final heal recovers everything
+    final = res.records[-1]
+    assert final.served_fraction == 1.0
+    assert len(res.state.lost) == 0
+    assert res.state.table.n_routed() == topo.n * (topo.n - 1)
+    assert res.state.l_max <= res.baseline_l_max * L_MAX_BOUND
+
+
+def test_campaign_coalesces_storms(served):
+    topo, st = served
+    sched = X.generate_schedule(st.at, n_arrivals=12, seed=5)
+    res = X.run_campaign(st, sched, coalesce=1.0)
+    storms = [r for r in res.records if r.kind == "storm"]
+    assert storms and max(r.coalesced for r in storms) > 1
+    # total arrivals are conserved across grouping
+    assert sum(r.coalesced for r in res.records) == sched.n_events
+
+
+def test_campaign_replays_bit_identically(served):
+    topo, st = served
+    sched = X.generate_schedule(st.at, n_arrivals=10, seed=9)
+    a = X.run_campaign(st, sched, coalesce=1.0)
+    b = X.run_campaign(
+        st, X.generate_schedule(st.at, n_arrivals=10, seed=9),
+        coalesce=1.0)
+    assert a.fingerprint() == b.fingerprint()
+    assert a.ok and b.ok
+    # and the timeline views agree field by field (MTTR is measured
+    # wall-clock, the one legitimately non-deterministic column)
+    ta, tb = a.timeline(), b.timeline()
+    ta.pop("mttr_s"), tb.pop("mttr_s")
+    assert ta == tb
+
+
+# ---------------------------------------------------------------------------
+# randomized fault/restore property: invariants hold at every step
+# ---------------------------------------------------------------------------
+
+
+def _random_ops_preserve_invariants(seed: int, n_ops: int) -> None:
+    st = _prop_state()
+    ch = st.at.channels
+    rng = np.random.default_rng(seed)
+    cur = st
+    for _ in range(n_ops):
+        if len(cur.dead) and rng.random() < 0.4:
+            k = int(rng.integers(1, len(cur.dead) + 1))
+            chans = np.sort(rng.choice(cur.dead, size=k, replace=False))
+            rr = restore_channels(cur, chans)
+        else:
+            if rng.random() < 0.5:
+                node = int(rng.integers(ch.n_nodes))
+                chans = np.nonzero((ch.src == node)
+                                   | (ch.dst == node))[0]
+            else:
+                c = int(rng.choice(np.unique(ch.color[ch.color >= 0])))
+                chans = np.nonzero(ch.color == c)[0]
+            chans = np.setdiff1d(chans.astype(np.int64), cur.dead)
+            if not len(chans):
+                continue
+            rr = repair_fault(cur, chans)
+        assert not rr.fallback
+        inv = X.check_invariants(cur, rr)
+        assert all(inv.values()), (seed, inv)
+        cur = rr.state
+    # closing heal always recovers the cold build's reachability
+    if len(cur.dead):
+        rr = restore_channels(cur, cur.dead)
+        inv = X.check_invariants(cur, rr)
+        assert all(inv.values()), (seed, inv)
+        cur = rr.state
+    assert len(cur.lost) == 0
+    assert cur.table.n_routed() == st.table.n_flows
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(seed=hst.integers(0, 2**31 - 1), n_ops=hst.integers(2, 4))
+    def test_random_fault_restore_sequences_keep_invariants(seed, n_ops):
+        _random_ops_preserve_invariants(seed, n_ops)
+else:
+    @pytest.mark.parametrize("seed,n_ops",
+                             [(0, 3), (1, 4), (7, 2), (13, 4)])
+    def test_random_fault_restore_sequences_keep_invariants(seed, n_ops):
+        _random_ops_preserve_invariants(seed, n_ops)
+
+
+# ---------------------------------------------------------------------------
+# 8^3 acceptance campaign (opt-in)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.huge
+@pytest.mark.slow          # the fast lane's -m "not slow" overrides the
+def test_8cube_chaos_campaign_acceptance():         # "not huge" addopts
+    """The PR's acceptance campaign (``pytest -m huge``): a seeded
+    >= 20-event 8^3 timeline with at least one coalesced multi-OCS
+    storm, one disconnecting fault served degraded (no cold recompute)
+    and one restoration; every invariant green at every event; the
+    final heal recovers pre-fault reachability with l_max within 1.10x
+    of the cold build; and the campaign replays bit-identically."""
+    topo = T.pdtt((8, 8, 8))
+    st = ServingState.build(topo, n_vc=2, K=4, seed=0, robust=True)
+    sched = X.generate_schedule(st.at, n_arrivals=20, seed=7)
+    assert sched.n_events >= 20
+    res = X.run_campaign(st, sched, coalesce=1.0)
+    assert res.ok, [r.invariants for r in res.records if not r.ok]
+    assert any(r.kind == "storm" and r.coalesced > 1 for r in res.records)
+    assert any(r.lost_pairs > 0 and not r.fallback for r in res.records)
+    assert any(r.kind == "restore" for r in res.records)
+    assert not any(r.fallback for r in res.records)
+    assert len(res.state.lost) == 0
+    assert res.state.table.n_routed() == topo.n * (topo.n - 1)
+    assert res.state.l_max <= res.baseline_l_max * L_MAX_BOUND
+    replay = X.run_campaign(
+        st, X.generate_schedule(st.at, n_arrivals=20, seed=7),
+        coalesce=1.0)
+    assert replay.fingerprint() == res.fingerprint()

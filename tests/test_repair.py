@@ -14,7 +14,8 @@ from scipy.sparse.csgraph import connected_components
 from repro.core import fault as F, routing as R, topology as T, \
     vcalloc as V
 from repro.core.repair import (ServingState, _pruned_at, _readmit,
-                               full_recompute, repair_fault)
+                               full_recompute, repair_fault,
+                               restore_channels)
 
 L_MAX_BOUND = 1.10
 
@@ -175,15 +176,49 @@ def test_multi_fault_sequence_repair_after_repair(served):
 
 
 def test_fallback_full_recompute_on_disconnection(served):
+    # legacy opt-in: on_disconnect="recompute" falls back to a cold
+    # rebuild over the reachable pairs (renumbering flows)
     topo, st = served
     ch = st.at.channels
     dead = np.nonzero((ch.src == 0) | (ch.dst == 0))[0].astype(np.int64)
-    rr = repair_fault(st, dead, verify="full")
+    rr = repair_fault(st, dead, verify="full", on_disconnect="recompute")
     assert rr.fallback
     # node 0 is gone: exactly its flows are unreachable
     assert rr.unreachable == 2 * (topo.n - 1)
     assert rr.deadlock_free
     assert not _dead_mask(st, dead)[rr.state.table.chan].any()
+
+
+def test_degraded_mode_default_on_disconnection(served):
+    # the default now serves degraded: no cold recompute, flow ids keep
+    # their slots (lost pairs become zero-length entries), and a
+    # restore of the killed channels recovers every pair exactly
+    topo, st = served
+    ch = st.at.channels
+    dead = np.nonzero((ch.src == 0) | (ch.dst == 0))[0].astype(np.int64)
+    rr = repair_fault(st, dead, verify="full")
+    assert not rr.fallback
+    assert rr.unreachable == 2 * (topo.n - 1)
+    assert rr.lost == 2 * (topo.n - 1)
+    assert rr.deadlock_free
+    new = rr.state
+    assert new.table.n_flows == st.table.n_flows      # slots survive
+    np.testing.assert_array_equal(
+        np.sort(new.lost), np.nonzero(new.table.flow_len == 0)[0])
+    # lost pairs are exactly node 0's flows
+    assert ((new.table.flow_src[new.lost] == 0)
+            | (new.table.dst[new.lost] == 0)).all()
+    assert new.served_fraction == pytest.approx(
+        1.0 - rr.lost / st.table.n_flows)
+    np.testing.assert_array_equal(new.loads[:-1],
+                                  new.table.loads().astype(np.int64))
+    assert not _dead_mask(st, dead)[new.table.chan].any()
+    # heal: restoring the channels recovers full reachability
+    heal = restore_channels(new, dead, verify="full")
+    assert heal.restored == len(dead)
+    assert len(heal.state.lost) == 0
+    assert heal.state.table.n_routed() == topo.n * (topo.n - 1)
+    assert heal.l_max <= st.l_max * L_MAX_BOUND
 
 
 def test_noop_repair_on_empty_fault(served):
