@@ -331,12 +331,11 @@ def main(full: bool = False, json_path=None) -> dict:
                          ADAPTIVE_OFF_REGRESSION)
 
     # ---- adaptive-routing lane (8^3, hotspot) ------------------------
-    from repro.core import routing as R
+    from repro.core.pipeline import PipelineConfig, route_pod
 
-    at8 = R.allowed_turns(topo8, n_vc=4, priority="robust")
-    sel8 = R.select_paths(at8, K=4, local_search_rounds=1,
-                          engine="sharded")
-    atab8 = NS.at_tables(topo8, at8, sel8, reserve_escape=True)
+    atab8 = route_pod(topo8, PipelineConfig(
+        n_vc=4, priority="robust", K=4, local_search_rounds=1,
+        engine="sharded", reserve_escape=True)).tables
     spec8 = NS.adaptive_spec(topo8)
     # 8 hot endpoints at frac 0.4: consumption-limited sat ~= 0.039, so
     # a 0.005 step resolves the static-vs-adaptive gap (one hot node
@@ -375,15 +374,11 @@ def main(full: bool = False, json_path=None) -> dict:
 
     # ---- 12^3 saturation entry (--full; record kept across runs) -----
     if full:
-        from repro.core import routing as R
-
         topo12 = T.pt(FULL_SPEC)
         s12: dict = {}
         t0 = time.time()
-        at12 = R.allowed_turns(topo12, n_vc=2, priority="apl")
-        sel12 = R.select_paths(at12, K=4, local_search_rounds=1,
-                               engine="sharded")
-        tab12 = NS.at_tables(topo12, at12, sel12)
+        tab12 = route_pod(topo12, PipelineConfig(
+            K=4, local_search_rounds=1, engine="sharded")).tables
         t_route12 = time.time() - t0
         t0 = time.time()
         sat12, trace12 = NS.saturation_point(

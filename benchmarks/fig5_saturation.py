@@ -15,15 +15,15 @@ from benchmarks.common import emit, load_tons, timed
 
 def saturation(topo, mode: str, step=0.02, cycles=3000, warmup=1000,
                seed=0, traffic=None, stats=None):
-    from repro.core import netsim as NS, routing as R
+    from repro.core import netsim as NS
+    from repro.core.pipeline import PipelineConfig, route_pod
     if mode == "dor":
         tab = NS.dor_tables(topo)          # 2 escape VCs (datelines)
     else:
         # Table 2: 4 VCs total; AT spreads turns over all of them
-        at = R.allowed_turns(topo, n_vc=4, priority="apl", robust=False,
-                             seed=seed)
-        routed = R.select_paths(at, K=4, local_search_rounds=3, seed=seed)
-        tab = NS.at_tables(topo, at, routed)
+        tab = route_pod(topo, PipelineConfig(
+            n_vc=4, K=4, seed=seed, engine="array",
+            local_search_rounds=3)).tables
     sat, _ = NS.saturation_point(tab, step=step, cycles=cycles,
                                  warmup=warmup, traffic=traffic,
                                  stats=stats)
@@ -66,12 +66,12 @@ def main(full: bool = False) -> None:
     # static and with occupancy-driven adaptivity, under the stress
     # patterns the static tables were not planned for (hotspot
     # concentration; synchronized mean-preserving injection bursts)
-    from repro.core import netsim as NS, routing as R
+    from repro.core import netsim as NS
+    from repro.core.pipeline import PipelineConfig, route_pod
     from repro.core.traffic import TrafficPattern
-    at = R.allowed_turns(pdtt, n_vc=4, priority="robust")
-    sel = R.select_paths(at, K=4, local_search_rounds=1,
-                         engine="sharded")
-    tab = NS.at_tables(pdtt, at, sel, reserve_escape=True)
+    tab = route_pod(pdtt, PipelineConfig(
+        n_vc=4, priority="robust", K=4, local_search_rounds=1,
+        engine="sharded", reserve_escape=True)).tables
     aspec = NS.adaptive_spec(pdtt)
     # hotspot saturation is consumption-limited (~= hot/(frac*n)), far
     # below the uniform grid -- each stress row carries its own grid

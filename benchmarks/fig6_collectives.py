@@ -7,8 +7,9 @@ from benchmarks.common import emit, load_tons, timed
 
 
 def main(full: bool = False) -> None:
-    from repro.core import collectives as C, routing as R, topology as T
+    from repro.core import collectives as C, topology as T
     from repro.core.mcf import mcf_uniform
+    from repro.core.pipeline import PipelineConfig, route_pod
 
     cases = [("PT", T.pt((4, 4, 8)), 0.0078125)]
     loaded = load_tons(128)
@@ -17,8 +18,9 @@ def main(full: bool = False) -> None:
     print("# collective utilization (paper Fig. 6: AG/AR near-ideal for "
           "all; TONS tracks a higher a2a MCF limit)")
     for name, topo, lam in cases:
-        at = R.allowed_turns(topo, n_vc=2, priority="apl")
-        routed = R.select_paths(at, K=4, local_search_rounds=3)
+        routed = route_pod(topo, PipelineConfig(
+            K=4, engine="array", local_search_rounds=3,
+            vc="none")).routed
         (rep, us) = timed(C.collective_report, topo, routed, lam)
         for kind, r in rep.items():
             print(f"  {name:5s} {kind:11s}: util={r['utilization']:.3f} "

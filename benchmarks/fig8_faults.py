@@ -21,7 +21,8 @@ from benchmarks.common import emit, load_tons, timed
 
 def main(full: bool = False) -> None:
     from repro.core import collectives as C, fault as F, netsim as NS, \
-        routing as R, topology as T
+        topology as T
+    from repro.core.pipeline import PipelineConfig, route_pod
     from repro.core.repair import ServingState, repair_fault
     from repro.core.routing import RoutingResult
     from repro.core.traffic import TrafficPattern
@@ -34,8 +35,10 @@ def main(full: bool = False) -> None:
     import time
 
     for name, topo in cases:
-        at = R.allowed_turns(topo, n_vc=4, priority="apl", robust=True)
-        base = R.select_paths(at, K=4, local_search_rounds=2)
+        cfg = PipelineConfig(n_vc=4, robust=True, K=4,
+                             local_search_rounds=2, vc="none")
+        rp = route_pod(topo, cfg)
+        at, base = rp.at, rp.routed
         # the live fabric the incremental repairs recover from
         st = ServingState.build(topo, n_vc=4, K=4, seed=0, robust=True)
         colors = F.colors_in_use(topo)
@@ -64,8 +67,10 @@ def main(full: bool = False) -> None:
         for color in colors:
             dead = F.dead_channels_for_color(at, color)
             t0 = time.time()
-            routed = R.select_paths(at, K=4, local_search_rounds=1,
-                                    dead_channels=dead)
+            routed = route_pod(
+                topo, PipelineConfig(K=4, local_search_rounds=1,
+                                     vc="none"),
+                at=at, dead_channels=dead).routed
             t_route += time.time() - t0
             t0 = time.time()
             rr = repair_fault(st, dead)

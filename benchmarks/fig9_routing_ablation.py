@@ -10,6 +10,7 @@ from benchmarks.common import emit, load_tons, timed
 
 def main(full: bool = False) -> None:
     from repro.core import netsim as NS, routing as R, topology as T
+    from repro.core.pipeline import PipelineConfig, route_pod
     from repro.core.vcalloc import allocate_vcs
 
     # --full ablates on a 512-chip 8^3 pod (synthesized TONS if cached,
@@ -25,19 +26,16 @@ def main(full: bool = False) -> None:
     lb_hops = d[np.isfinite(d)].sum() / (topo.n * (topo.n - 1))
     lb_load = R.load_lower_bound(topo)
 
-    # Fig. 9: prioritization heuristics. AT-construction wall-clock is
-    # reported per priority mode so the ablation separates the admission
-    # front-end cost from the path-selection cost.
-    import time
+    # Fig. 9: prioritization heuristics. The facade's per-stage timings
+    # separate the admission front-end cost from the path-selection cost.
     results = {}
     for mode in ("apl", "random"):
-        t0 = time.time()
-        at = R.allowed_turns(topo, n_vc=2, priority=mode)
-        t_at = time.time() - t0
-        t0 = time.time()
-        routed = R.select_paths(at, K=4, local_search_rounds=3)
-        t_sel = time.time() - t0
-        results[mode] = (routed, at)
+        rp = route_pod(topo, PipelineConfig(
+            priority=mode, K=4, engine="array",
+            local_search_rounds=3, vc="none"))
+        routed = rp.routed
+        t_at, t_sel = rp.timings["at_s"], rp.timings["select_s"]
+        results[mode] = (routed, rp.at)
         print(f"  {mode:6s}: Lmax/LB={routed.l_max / lb_load:.3f} "
               f"hops/min={routed.avg_hops / lb_hops:.3f} "
               f"AT={t_at:.2f}s select={t_sel:.2f}s")
@@ -45,12 +43,11 @@ def main(full: bool = False) -> None:
              f"{routed.l_max / lb_load:.3f}")
     # CPL: re-prioritize by the APL routing's chosen turn frequencies
     freq = R.turn_frequencies(results["apl"][0].table)
-    t0 = time.time()
-    at_cpl = R.allowed_turns(topo, n_vc=2, chosen_loads=freq)
-    t_at = time.time() - t0
-    t0 = time.time()
-    routed_cpl = R.select_paths(at_cpl, K=4, local_search_rounds=3)
-    t_sel = time.time() - t0
+    rp = route_pod(topo, PipelineConfig(
+        K=4, engine="array", local_search_rounds=3, vc="none"),
+        chosen_loads=freq)
+    routed_cpl = rp.routed
+    t_at, t_sel = rp.timings["at_s"], rp.timings["select_s"]
     print(f"  cpl   : Lmax/LB={routed_cpl.l_max / lb_load:.3f} "
           f"hops/min={routed_cpl.avg_hops / lb_hops:.3f} "
           f"AT={t_at:.2f}s select={t_sel:.2f}s")
@@ -70,9 +67,9 @@ def main(full: bool = False) -> None:
     # Fig. 11: DOR skew on the torus baseline
     pt = T.pt((4, 4, 8))
     counts = NS.dor_paths(pt).vc_hop_counts()
-    at_pt = R.allowed_turns(pt, n_vc=2, priority="apl")
-    routed_pt = R.select_paths(at_pt, K=4, local_search_rounds=2)
-    at_counts = allocate_vcs(at_pt, routed_pt.table, balance=True)
+    at_counts = route_pod(pt, PipelineConfig(
+        K=4, engine="array", local_search_rounds=2,
+        vc="inplace")).vc_counts
     print(f"  DOR hops/VC={counts.tolist()}  AT hops/VC="
           f"{at_counts.tolist()}")
     emit("fig11_dor_vc0_share", 0,

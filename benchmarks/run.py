@@ -57,7 +57,13 @@ def main() -> int:
                          "checks, min served-pair fraction and the "
                          "post-heal l_max ratio vs the cold build; "
                          "--full adds netsim throughput probes along "
-                         "the timeline). Guarded "
+                         "the timeline) and BENCH_workload.json (the "
+                         "guarded workload co-design lane: per-workload "
+                         "demand-specialized synthesis wall-clock, "
+                         "demand-weighted MCF + trace-replay saturation "
+                         "of specialized vs generic TONS vs torus, and "
+                         "the two-tenant shared-fabric accounting; "
+                         "--full adds the 256-chip entry). Guarded "
                          "timings are medians of 3 repeats; regressions "
                          "past the per-guard bound vs the stored "
                          "baseline print a WARNING line")
@@ -75,17 +81,19 @@ def main() -> int:
         args.json = True
 
     from benchmarks import (bench_chaos, bench_netsim, bench_routing,
-                            bench_synthesis, fig1_smallgraphs,
-                            fig2_progress, fig3_analytical,
-                            fig5_saturation, fig6_collectives,
-                            fig7_traces, fig8_faults,
-                            fig9_routing_ablation, fig10_chaos, roofline)
+                            bench_synthesis, bench_workload,
+                            fig1_smallgraphs, fig2_progress,
+                            fig3_analytical, fig5_saturation,
+                            fig6_collectives, fig7_traces, fig8_faults,
+                            fig9_routing_ablation, fig10_chaos,
+                            fig11_workload, roofline)
     from benchmarks.common import REGRESSIONS
     root = Path(__file__).parent.parent
     netsim_json = root / "BENCH_netsim.json" if args.json else None
     routing_json = root / "BENCH_routing.json" if args.json else None
     synthesis_json = root / "BENCH_synthesis.json" if args.json else None
     chaos_json = root / "BENCH_chaos.json" if args.json else None
+    workload_json = root / "BENCH_workload.json" if args.json else None
     suites = [
         ("fig1_smallgraphs", fig1_smallgraphs.main),
         ("fig2_progress", fig2_progress.main),
@@ -107,6 +115,10 @@ def main() -> int:
              full, json_path=synthesis_json)),
         ("bench_chaos",
          lambda full=False: bench_chaos.main(full, json_path=chaos_json)),
+        ("bench_workload",
+         lambda full=False: bench_workload.main(
+             full, json_path=workload_json)),
+        ("fig11_workload", fig11_workload.main),
     ]
     errors = []
     print("name,us_per_call,derived")

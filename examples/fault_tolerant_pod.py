@@ -13,8 +13,9 @@ sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 import numpy as np
 
-from repro.core import fault as F, routing as R, topology as T
+from repro.core import fault as F, topology as T
 from repro.core.mcf import mcf_topology
+from repro.core.pipeline import PipelineConfig, route_pod
 
 
 def main() -> None:
@@ -36,15 +37,16 @@ def main() -> None:
           f"{cert['certified_f']} OCS faults tolerable "
           f"(color budget {cert['color_budget']})")
 
-    at = R.allowed_turns(topo, n_vc=2, priority="apl", robust=True)
-    base = R.select_paths(at, K=4, local_search_rounds=2)
+    cfg = PipelineConfig(robust=True, K=4, engine="array",
+                         local_search_rounds=2, vc="none")
+    rp = route_pod(topo, cfg)
+    at, base = rp.at, rp.routed
     print(f"no fault: all pairs routed, L_max={base.l_max:.0f}")
 
     colors = F.colors_in_use(topo)
     fault = colors[len(colors) // 2]
     dead = F.dead_channels_for_color(at, fault)
-    routed = R.select_paths(at, K=4, local_search_rounds=2,
-                            dead_channels=dead)
+    routed = route_pod(topo, cfg, at=at, dead_channels=dead).routed
     print(f"OCS {fault} failed ({len(dead)} channels dead): "
           f"unreachable={routed.unreachable}, L_max={routed.l_max:.0f} "
           f"({routed.l_max / base.l_max:.2f}x degradation)")

@@ -10,9 +10,9 @@ sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
 import numpy as np
 
-from repro.core import routing as R, synthesis as SY, topology as T
+from repro.core import synthesis as SY, topology as T
 from repro.core.mcf import mcf_uniform, mcf_topology
-from repro.core.vcalloc import allocate_vcs, verify_deadlock_free
+from repro.core.pipeline import PipelineConfig, route_pod
 
 
 def main() -> None:
@@ -37,13 +37,14 @@ def main() -> None:
           f"({lam / lam_pt:.2f}x PT, {lam / lam_pdtt:.2f}x PDTT)")
 
     print("== deadlock-free routing within 2 VCs ==")
-    at = R.allowed_turns(res.topology, n_vc=2, priority="apl", robust=True)
-    routed = R.select_paths(at, K=4, local_search_rounds=3)
-    counts = allocate_vcs(at, routed.table)
-    assert verify_deadlock_free(at, routed.table)
-    print(f"all {routed.table.n_routed()} pairs routed; "
-          f"L_max={routed.l_max:.0f} "
-          f"(MCF bound {1 / lam:.0f}); VC hop balance={counts.tolist()}")
+    rp = route_pod(res.topology, PipelineConfig(
+        robust=True, K=4, engine="array", local_search_rounds=3,
+        vc="inplace", verify=True))
+    assert rp.deadlock_free
+    print(f"all {rp.table.n_routed()} pairs routed; "
+          f"L_max={rp.l_max:.0f} "
+          f"(MCF bound {1 / lam:.0f}); "
+          f"VC hop balance={rp.vc_counts.tolist()}")
 
 
 if __name__ == "__main__":

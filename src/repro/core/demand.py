@@ -77,6 +77,26 @@ class WorkloadDemand:
         return w
 
 
+def from_mix(pod: Pod, wires: Dict[str, float]) -> WorkloadDemand:
+    """Per-collective wire-byte mix -> pairwise weight levels.
+
+    The single mapping shared by the dry-run reader below and the
+    analytic estimator in :mod:`repro.core.workload`: MoE/EP
+    all-to-all bytes load the same-cube weight (the model axis lives
+    inside a cube), ring-style collectives (all-reduce,
+    reduce-scatter, all-gather) load the cross-cube DP ring, and a
+    uniform floor keeps every pair connected-by-demand.
+    """
+    a2a = wires.get("all-to-all", 0.0)
+    ar = wires.get("all-reduce", 0.0) + wires.get("reduce-scatter", 0.0) \
+        + wires.get("all-gather", 0.0)
+    total = a2a + ar
+    if total <= 0:
+        return WorkloadDemand(pod)
+    return WorkloadDemand(pod, w_same_cube=4.0 * a2a / total,
+                          w_ring=4.0 * ar / total, w_uniform=0.25)
+
+
 def from_dryrun(podspec, arch: str, shape: str,
                 dryrun_dir: str = "benchmarks/results/dryrun",
                 mesh: str = "single_pod_16x16") -> WorkloadDemand:
@@ -88,16 +108,7 @@ def from_dryrun(podspec, arch: str, shape: str,
     d = json.loads(f.read_text())
     coll = d.get("collectives", {})
     wires = {k: v.get("wire_bytes", 0.0) for k, v in coll.items()}
-    a2a = wires.get("all-to-all", 0.0)
-    ar = wires.get("all-reduce", 0.0) + wires.get("reduce-scatter", 0.0) \
-        + wires.get("all-gather", 0.0)
-    total = a2a + ar
-    if total <= 0:
-        return WorkloadDemand(pod)
-    # normalise into weight levels; keep a uniform floor so every pair
-    # stays connected-by-demand
-    return WorkloadDemand(pod, w_same_cube=4.0 * a2a / total,
-                          w_ring=4.0 * ar / total, w_uniform=0.25)
+    return from_mix(pod, wires)
 
 
 def weighted_mcf(topo, demand: WorkloadDemand, perms=None,

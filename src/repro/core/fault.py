@@ -13,9 +13,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.pipeline import PipelineConfig, route_pod
 from repro.core.repair import RepairResult, ServingState, repair_fault
-from repro.core.routing import ATResult, RoutingResult, allowed_turns, \
-    select_paths
+from repro.core.routing import ATResult, RoutingResult, allowed_turns
 from repro.core.topology import N_COLORS, Topology
 
 
@@ -123,7 +123,10 @@ def fault_sweep(topo: Topology, at: ATResult, K: int = 6, seed: int = 0,
                                         rr.unreachable == 0, repair=rr))
         else:
             s = seed if rng is None else int(rng.integers(0, 2**31 - 1))
-            routed = select_paths(at, K=K, seed=s, dead_channels=dead)
+            cfg = PipelineConfig(K=K, seed=s, engine="array",
+                                 local_search_rounds=3, vc="none")
+            routed = route_pod(topo, cfg, at=at,
+                               dead_channels=dead).routed
             out.append(FaultSweepResult(color, routed,
                                         routed.unreachable == 0))
     return out

@@ -58,7 +58,8 @@ from repro.core.routing import (ATResult, Channels, RoutingResult,
                                 _dead_channel_array)
 from repro.core.topology import Topology
 from repro.core.traffic import (CompiledFlowTraffic, CompiledTraffic,
-                                TrafficPattern, compile_flow_traffic)
+                                PhasedTraffic, TrafficPattern,
+                                compile_flow_traffic)
 
 
 @dataclasses.dataclass
@@ -167,12 +168,14 @@ def _pack_flow(flow, hop, tag):
 @partial(jax.jit, static_argnames=("R", "n", "n_ch", "n_vc", "slots",
                                    "cycles", "warmup", "flits", "adaptive",
                                    "faulted", "bursty", "patience",
-                                   "watchdog", "D", "period", "on_cycles"))
+                                   "watchdog", "D", "period", "on_cycles",
+                                   "T", "phased", "p_period"))
 def _sweep_csr(ch_dst, pvf, hptr, lenm1, dstN, src_ptr, deg, fprob, falias,
                src_rate, rates, key, outch, minmask, esc, alive, t_fault,
-               g_on, g_off, phase, *, R, n, n_ch, n_vc, slots, cycles,
-               warmup, flits, adaptive=False, faulted=False, bursty=False,
-               patience=64, watchdog=512, D=1, period=0, on_cycles=0):
+               g_on, g_off, phase, tof, tmap, phase_of, *, R, n, n_ch, n_vc,
+               slots, cycles, warmup, flits, adaptive=False, faulted=False,
+               bursty=False, patience=64, watchdog=512, D=1, period=0,
+               on_cycles=0, T=0, phased=False, p_period=1):
     """R independent simulations (one per injection rate) in one compiled
     execution, gathering routes from the CSR hop arrays.
 
@@ -211,6 +214,15 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, dstN, src_ptr, deg, fprob, falias,
       stalled (``stalled_at`` = cycle of detection); when *every* lane
       is stalled the sweep aborts early instead of spinning out the
       budget.
+    - ``phased`` (trace replay): ``fprob``/``falias``/``src_rate`` carry
+      a leading phase axis and ``phase_of[i % p_period]`` selects the
+      active demand phase each cycle -- same RNG draw count as the
+      stationary path, so a single-phase schedule is bit-identical.
+    - ``T > 0`` (multi-tenant): ``tof`` maps flow -> tenant id (-1 =
+      none) and the kernel keeps per-(lane, tenant) injected / consumed
+      / consumed-in-window counters plus end-of-run queued words, giving
+      exact per-tenant conservation (injected == consumed + in-flight).
+      No extra RNG draws, so the default trace is unchanged when off.
     """
     C = R * n_ch                    # flat channels across lanes
     NQ = C * n_vc                   # flat queues across lanes
@@ -226,7 +238,10 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, dstN, src_ptr, deg, fprob, falias,
 
     srcs = jnp.tile(jnp.arange(n), R)            # local node ids per lane
     lane_q = (jnp.arange(N) // n) * (n_ch * n_vc)
-    thresh = (rates[:, None] * src_rate[None, :]).reshape(N)
+    if T:
+        word_tenant = lambda w: tof[w & _FLOW_MASK]   # noqa: E731
+    if not phased:
+        thresh = (rates[:, None] * src_rate[None, :]).reshape(N)
     if bursty:
         phs = jnp.tile(phase, R)                 # (N,) per-source offsets
     if adaptive:
@@ -237,9 +252,10 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, dstN, src_ptr, deg, fprob, falias,
     def cycle(carry):
         i, q, head, size, rr, busy, key, stall, wstall, stalled_at, \
             stats = carry
-        offered, accepted, tagged, consumed_meas, consumed, injected, \
-            escaped = stats
+        (offered, accepted, tagged, consumed_meas, consumed, injected,
+         escaped, inj_t, cons_t, consm_t) = stats
         ph = (i >= t_fault).astype(jnp.int32) if faulted else 0
+        phz = phase_of[i % p_period] if phased else 0
 
         # ---- head packet per (lane, channel, vc) --------------------------
         hw = q[jnp.arange(NQ), head]
@@ -370,19 +386,24 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, dstN, src_ptr, deg, fprob, falias,
         # ---- injection: alias-sampled routed flow per source --------------
         measure = i >= warmup
         key, k1, k2, k3 = jax.random.split(key, 4)
+        if phased:
+            thr = (rates[:, None] * src_rate[phz][None, :]).reshape(N)
+            fp, fa = fprob[phz], falias[phz]
+        else:
+            thr, fp, fa = thresh, fprob, falias
         if bursty:
             on = ((i + phs) % period) < on_cycles
             want = jax.random.uniform(k1, (N,)) \
-                < thresh * jnp.where(on, g_on, g_off)
+                < thr * jnp.where(on, g_on, g_off)
         else:
-            want = jax.random.uniform(k1, (N,)) < thresh
+            want = jax.random.uniform(k1, (N,)) < thr
         u1 = jax.random.uniform(k2, (N,))
         dg = deg[srcs]
         j = jnp.minimum((u1 * dg.astype(jnp.float32)).astype(jnp.int32),
                         dg - 1)
         f0 = src_ptr[srcs] + jnp.maximum(j, 0)
         u2 = jax.random.uniform(k3, (N,))
-        fid = jnp.where(u2 < fprob[f0], f0, falias[f0])
+        fid = jnp.where(u2 < fp[f0], f0, fa[f0])
         cv0 = pvf[hptr[fid]]
         if adaptive or faulted:
             ch0 = cv0 // n_vc
@@ -442,6 +463,21 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, dstN, src_ptr, deg, fprob, falias,
         consumed = consumed + cons_lane
         injected = injected + inj_lane
 
+        if T:
+            # per-(lane, tenant) accounting; flow -> tenant is static
+            # (`tof`), so attribution costs two gathers and two
+            # scatter-adds, no extra RNG
+            t_w = tof[hf[win_q]]
+            ok_w = w_consume & (t_w >= 0)
+            rowc = (jnp.arange(C) // n_ch) * T + jnp.clip(t_w, 0, T - 1)
+            cons_t = cons_t.at[rowc].add(ok_w.astype(jnp.int32))
+            consm_t = consm_t.at[rowc].add(
+                (ok_w & measure).astype(jnp.int32))
+            t_i = tof[fid]
+            rowi = (jnp.arange(N) // n) * T + jnp.clip(t_i, 0, T - 1)
+            inj_t = inj_t.at[rowi].add(
+                (inj & (t_i >= 0)).astype(jnp.int32))
+
         if adaptive:
             # per-queue persistent-stall counter (drives escape diversion)
             popped = w_pop[qrows // n_vc] & (win_q[qrows // n_vc] == qrows)
@@ -461,9 +497,10 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, dstN, src_ptr, deg, fprob, falias,
         return (i + 1, q, head, size, rr, busy, key, stall, wstall,
                 stalled_at,
                 (offered, accepted, tagged, consumed_meas, consumed,
-                 injected, escaped))
+                 injected, escaped, inj_t, cons_t, consm_t))
 
-    stats0 = (jnp.zeros((R,), jnp.int32),) * 7
+    stats0 = (jnp.zeros((R,), jnp.int32),) * 7 \
+        + (jnp.zeros((R * T,), jnp.int32),) * 3
     stall0 = jnp.zeros((NQ if adaptive else 1,), jnp.int32)
     carry = (jnp.int32(0), q, head, size, rr, busy, key, stall0,
              jnp.zeros((R,), jnp.int32), jnp.full((R,), -1, jnp.int32),
@@ -473,23 +510,40 @@ def _sweep_csr(ch_dst, pvf, hptr, lenm1, dstN, src_ptr, deg, fprob, falias,
         return (carry[0] < cycles) & ~jnp.all(carry[8] >= watchdog)
 
     carry = jax.lax.while_loop(cond, cycle, carry)
-    size = carry[3]
+    q, head, size = carry[1], carry[2], carry[3]
     stalled_at = carry[9]
-    offered, accepted, tagged, consumed_meas, consumed, injected, \
-        escaped = carry[-1]
+    (offered, accepted, tagged, consumed_meas, consumed, injected,
+     escaped, inj_t, cons_t, consm_t) = carry[-1]
+    if T:
+        # per-tenant end-of-run occupancy from the final ring buffers:
+        # slot j of queue r holds a live word iff (j - head) % slots
+        # < size -- exact, so injected == consumed + in_flight per tenant
+        occ = ((jnp.arange(slots)[None, :] - head[:, None]) % slots) \
+            < size[:, None]
+        tw = word_tenant(q)                             # (NQ, slots)
+        rows = (jnp.arange(NQ) // (n_ch * n_vc))[:, None] * T \
+            + jnp.clip(tw, 0, T - 1)
+        infl_t = jnp.zeros((R * T,), jnp.int32) \
+            .at[rows].add((occ & (tw >= 0)).astype(jnp.int32))
+    else:
+        infl_t = jnp.zeros((0,), jnp.int32)
     return (offered, accepted, tagged, consumed_meas, consumed, injected,
-            escaped, size.reshape(R, -1).sum(axis=1), stalled_at, carry[0])
+            escaped, size.reshape(R, -1).sum(axis=1), stalled_at,
+            inj_t, cons_t, consm_t, infl_t, carry[0])
 
 
 @partial(jax.jit, static_argnames=("R", "n", "n_ch", "n_vc", "slots",
                                    "cycles", "warmup", "flits", "adaptive",
                                    "faulted", "bursty", "patience",
-                                   "watchdog", "D", "period", "on_cycles"))
+                                   "watchdog", "D", "period", "on_cycles",
+                                   "T", "phased", "p_period"))
 def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
                  src_rate, rates, key, outch, minmask, esc, alive, t_fault,
-                 g_on, g_off, phase, *, R, n, n_ch, n_vc, slots, cycles,
-                 warmup, flits, adaptive=False, faulted=False, bursty=False,
-                 patience=64, watchdog=512, D=1, period=0, on_cycles=0):
+                 g_on, g_off, phase, tof, tmap, phase_of, *, R, n, n_ch,
+                 n_vc, slots, cycles, warmup, flits, adaptive=False,
+                 faulted=False, bursty=False, patience=64, watchdog=512,
+                 D=1, period=0, on_cycles=0, T=0, phased=False,
+                 p_period=1):
     """Legacy dense-gather kernel: identical cycle body to
     :func:`_sweep_csr` (same RNG stream, same flow-slot sampling, same
     arbitration) except route lookups gather from the dense
@@ -513,7 +567,11 @@ def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
     arrive_node = jnp.tile(ch_dst, R)[jnp.arange(NQ) // n_vc]
     srcs = jnp.tile(jnp.arange(n), R)
     lane_q = (jnp.arange(N) // n) * (n_ch * n_vc)
-    thresh = (rates[:, None] * src_rate[None, :]).reshape(N)
+    if T:
+        word_tenant = lambda w: tmap[w & _FIELD_MASK,   # noqa: E731
+                                     (w >> _DST_SHIFT) & _FIELD_MASK]
+    if not phased:
+        thresh = (rates[:, None] * src_rate[None, :]).reshape(N)
     if bursty:
         phs = jnp.tile(phase, R)
     if adaptive:
@@ -523,9 +581,10 @@ def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
     def cycle(carry):
         i, q, head, size, rr, busy, key, stall, wstall, stalled_at, \
             stats = carry
-        offered, accepted, tagged, consumed_meas, consumed, injected, \
-            escaped = stats
+        (offered, accepted, tagged, consumed_meas, consumed, injected,
+         escaped, inj_t, cons_t, consm_t) = stats
         ph = (i >= t_fault).astype(jnp.int32) if faulted else 0
+        phz = phase_of[i % p_period] if phased else 0
 
         hw = q[jnp.arange(NQ), head]
         hs = hw & _FIELD_MASK
@@ -627,19 +686,24 @@ def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
 
         measure = i >= warmup
         key, k1, k2, k3 = jax.random.split(key, 4)
+        if phased:
+            thr = (rates[:, None] * src_rate[phz][None, :]).reshape(N)
+            fp, fa = fprob[phz], falias[phz]
+        else:
+            thr, fp, fa = thresh, fprob, falias
         if bursty:
             on = ((i + phs) % period) < on_cycles
             want = jax.random.uniform(k1, (N,)) \
-                < thresh * jnp.where(on, g_on, g_off)
+                < thr * jnp.where(on, g_on, g_off)
         else:
-            want = jax.random.uniform(k1, (N,)) < thresh
+            want = jax.random.uniform(k1, (N,)) < thr
         u1 = jax.random.uniform(k2, (N,))
         dg = deg[srcs]
         j = jnp.minimum((u1 * dg.astype(jnp.float32)).astype(jnp.int32),
                         dg - 1)
         f0 = src_ptr[srcs] + jnp.maximum(j, 0)
         u2 = jax.random.uniform(k3, (N,))
-        fid = jnp.where(u2 < fprob[f0], f0, falias[f0])
+        fid = jnp.where(u2 < fp[f0], f0, fa[f0])
         dsts = fdst[fid]
         cv0 = pv[srcs, dsts, 0]
         if adaptive or faulted:
@@ -690,6 +754,23 @@ def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
         consumed = consumed + cons_lane
         injected = injected + inj_lane
 
+        if T:
+            # dense words carry (src, dst): attribute via the pair map
+            # (tof[fid] == tmap[srcs, dsts] by construction, so the CSR
+            # kernel's counters stay bit-identical)
+            ws = w_word & _FIELD_MASK
+            wd = (w_word >> _DST_SHIFT) & _FIELD_MASK
+            t_w = tmap[ws, wd]
+            ok_w = w_consume & (t_w >= 0)
+            rowc = (jnp.arange(C) // n_ch) * T + jnp.clip(t_w, 0, T - 1)
+            cons_t = cons_t.at[rowc].add(ok_w.astype(jnp.int32))
+            consm_t = consm_t.at[rowc].add(
+                (ok_w & measure).astype(jnp.int32))
+            t_i = tof[fid]
+            rowi = (jnp.arange(N) // n) * T + jnp.clip(t_i, 0, T - 1)
+            inj_t = inj_t.at[rowi].add(
+                (inj & (t_i >= 0)).astype(jnp.int32))
+
         if adaptive:
             popped = w_pop[qrows // n_vc] & (win_q[qrows // n_vc] == qrows)
             stall = jnp.where(nonempty & ~popped, stall + 1, 0)
@@ -706,9 +787,10 @@ def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
         return (i + 1, q, head, size, rr, busy, key, stall, wstall,
                 stalled_at,
                 (offered, accepted, tagged, consumed_meas, consumed,
-                 injected, escaped))
+                 injected, escaped, inj_t, cons_t, consm_t))
 
-    stats0 = (jnp.zeros((R,), jnp.int32),) * 7
+    stats0 = (jnp.zeros((R,), jnp.int32),) * 7 \
+        + (jnp.zeros((R * T,), jnp.int32),) * 3
     stall0 = jnp.zeros((NQ if adaptive else 1,), jnp.int32)
     carry = (jnp.int32(0), q, head, size, rr, busy, key, stall0,
              jnp.zeros((R,), jnp.int32), jnp.full((R,), -1, jnp.int32),
@@ -718,12 +800,26 @@ def _sweep_dense(ch_dst, pv, fdst, src_ptr, deg, fprob, falias,
         return (carry[0] < cycles) & ~jnp.all(carry[8] >= watchdog)
 
     carry = jax.lax.while_loop(cond, cycle, carry)
-    size = carry[3]
+    q, head, size = carry[1], carry[2], carry[3]
     stalled_at = carry[9]
-    offered, accepted, tagged, consumed_meas, consumed, injected, \
-        escaped = carry[-1]
+    (offered, accepted, tagged, consumed_meas, consumed, injected,
+     escaped, inj_t, cons_t, consm_t) = carry[-1]
+    if T:
+        # per-tenant end-of-run occupancy from the final ring buffers:
+        # slot j of queue r holds a live word iff (j - head) % slots
+        # < size -- exact, so injected == consumed + in_flight per tenant
+        occ = ((jnp.arange(slots)[None, :] - head[:, None]) % slots) \
+            < size[:, None]
+        tw = word_tenant(q)                             # (NQ, slots)
+        rows = (jnp.arange(NQ) // (n_ch * n_vc))[:, None] * T \
+            + jnp.clip(tw, 0, T - 1)
+        infl_t = jnp.zeros((R * T,), jnp.int32) \
+            .at[rows].add((occ & (tw >= 0)).astype(jnp.int32))
+    else:
+        infl_t = jnp.zeros((0,), jnp.int32)
     return (offered, accepted, tagged, consumed_meas, consumed, injected,
-            escaped, size.reshape(R, -1).sum(axis=1), stalled_at, carry[0])
+            escaped, size.reshape(R, -1).sum(axis=1), stalled_at,
+            inj_t, cons_t, consm_t, infl_t, carry[0])
 
 
 def _compiled_flows(traffic, tables: SimTables) -> CompiledFlowTraffic:
@@ -732,7 +828,7 @@ def _compiled_flows(traffic, tables: SimTables) -> CompiledFlowTraffic:
         return traffic
     t = tables.csr()
     ct = compile_flow_traffic(traffic, t.src_indptr, t.dst)
-    if len(ct.prob) != t.n_flows:
+    if ct.prob.shape[-1] != t.n_flows:
         raise ValueError("flow traffic does not match the path table")
     return ct
 
@@ -786,7 +882,8 @@ def adaptive_spec(topo: Topology,
 
 def sweep(tables: SimTables, rates: Sequence[float],
           traffic: Optional[Union[TrafficPattern, CompiledTraffic,
-                                  CompiledFlowTraffic]] = None,
+                                  CompiledFlowTraffic,
+                                  PhasedTraffic]] = None,
           cycles: int = 6000, warmup: int = 2000, slots: int = 128,
           seed: int = 0, flits: int = 4, kernel: str = "csr",
           stats: Optional[dict] = None,
@@ -817,6 +914,15 @@ def sweep(tables: SimTables, rates: Sequence[float],
     after which a lane is declared stalled (``stalled_at`` per rate,
     ``stats["cycles_run"]`` < ``cycles`` when every lane wedged and the
     sweep aborted early).
+
+    A :class:`PhasedTraffic` input switches both kernels to trace
+    replay: the spatial demand phase follows the compiled schedule
+    cycle by cycle. A pattern carrying a
+    :class:`~repro.core.traffic.TenantMap` (from
+    :func:`~repro.core.traffic.compose_tenants`) adds a ``"tenants"``
+    entry to every rate dict -- per-tenant injected / consumed /
+    in-flight packet counts (exact conservation: injected == consumed +
+    in-flight) and delivered throughput per tenant node.
     """
     if MAXHOP > _HOP_MASK:
         raise ValueError(f"packed packet words support MAXHOP <= "
@@ -869,17 +975,36 @@ def sweep(tables: SimTables, rates: Sequence[float],
     else:
         period, on_cycles, g_on, g_off = 0, 0, 1.0, 1.0
         phase_np = np.zeros(tables.n, np.int32)
+    phased = ct.phases > 0
+    if phased:
+        phase_of_np = np.asarray(ct.phase_of, np.int32)
+        p_period = int(len(phase_of_np))
+    else:
+        phase_of_np = np.zeros(1, np.int32)
+        p_period = 1
+    tenants = ct.tenants
+    T = tenants.n_tenants if tenants is not None else 0
+    if T:
+        tmap_np = np.asarray(tenants.pair_tenant, np.int32)
+        t_csr = tables.csr()
+        fsrc = np.repeat(np.arange(tables.n),
+                         np.diff(t_csr.src_indptr).astype(np.int64))
+        tof_np = tmap_np[fsrc, np.asarray(t_csr.dst, np.int64)]
+    else:
+        tmap_np = np.zeros((1, 1), np.int32)
+        tof_np = np.zeros(1, np.int32)
     rates = np.asarray(list(rates), np.float32)
     R = len(rates)
     NQ = R * tables.n_ch * tables.n_vc
-    F = len(ct.prob)
+    F = int(ct.prob.shape[-1])
     state_bytes = NQ * slots * 4 + NQ * 8 + R * tables.n_ch * 8
     if adaptive_on:
         state_bytes += NQ * 4     # per-queue stall counters
     traffic_bytes = (ct.src_indptr.nbytes + ct.deg.nbytes + ct.prob.nbytes
                      + ct.alias.nbytes + ct.src_rate.nbytes)
     aux_bytes = (esc_np.nbytes + outch_np.nbytes + minmask_np.nbytes
-                 + alive_np.nbytes + phase_np.nbytes)
+                 + alive_np.nbytes + phase_np.nbytes + tof_np.nbytes
+                 + tmap_np.nbytes + phase_of_np.nbytes)
     if F == 0:
         if stats is not None:
             stats["kernel"] = kernel
@@ -942,14 +1067,17 @@ def sweep(tables: SimTables, rates: Sequence[float],
                  jnp.asarray(outch_np), jnp.asarray(minmask_np),
                  jnp.asarray(esc_np), jnp.asarray(alive_np),
                  jnp.int32(t_fault), jnp.float32(g_on), jnp.float32(g_off),
-                 jnp.asarray(np.asarray(phase_np, np.int32)), R=R,
+                 jnp.asarray(np.asarray(phase_np, np.int32)),
+                 jnp.asarray(tof_np), jnp.asarray(tmap_np),
+                 jnp.asarray(phase_of_np), R=R,
                  n=tables.n, n_ch=tables.n_ch, n_vc=tables.n_vc,
                  slots=slots, cycles=cycles, warmup=warmup, flits=flits,
                  adaptive=adaptive_on, faulted=faulted, bursty=bursty,
                  patience=patience, watchdog=watchdog, D=D, period=period,
-                 on_cycles=on_cycles)
-    off, acc, tagd, consm, cons, injd, escd, infl, stalled = \
-        (np.asarray(a) for a in out[:-1])
+                 on_cycles=on_cycles, T=T, phased=phased,
+                 p_period=p_period)
+    (off, acc, tagd, consm, cons, injd, escd, infl, stalled,
+     inj_t, cons_t, consm_t, infl_t) = (np.asarray(a) for a in out[:-1])
     cycles_run = int(out[-1])
     if stats is not None:
         stats["cycles_run"] = cycles_run
@@ -972,12 +1100,27 @@ def sweep(tables: SimTables, rates: Sequence[float],
             "escaped": int(escd[i]),
             "stalled_at": int(stalled[i]),
         })
+        if T:
+            # per-tenant accounting (exact conservation:
+            # injected == consumed + in_flight for every tenant)
+            tens = {}
+            for t_id, name in enumerate(tenants.names):
+                k = i * T + t_id
+                tens[name] = {
+                    "injected": int(inj_t[k]),
+                    "consumed": int(cons_t[k]),
+                    "in_flight": int(infl_t[k]),
+                    "delivered": float(consm_t[k]) / meas
+                    / max(int(tenants.n_nodes[t_id]), 1),
+                }
+            trace[-1]["tenants"] = tens
     return trace
 
 
 def run(tables: SimTables, rate: float,
         traffic: Optional[Union[TrafficPattern, CompiledTraffic,
-                                CompiledFlowTraffic]] = None,
+                                CompiledFlowTraffic,
+                                PhasedTraffic]] = None,
         cycles: int = 6000, warmup: int = 2000, slots: int = 128,
         seed: int = 0, flits: int = 4, kernel: str = "csr",
         stats: Optional[dict] = None,
@@ -997,7 +1140,8 @@ def saturation_point(tables: SimTables, step: float = 0.01,
                      slots: int = 128, flits: int = 4,
                      traffic: Optional[Union[TrafficPattern,
                                              CompiledTraffic,
-                                             CompiledFlowTraffic]] = None,
+                                             CompiledFlowTraffic,
+                                             PhasedTraffic]] = None,
                      seed: int = 0, kernel: str = "csr",
                      stats: Optional[dict] = None,
                      adaptive: Optional[AdaptiveSpec] = None,

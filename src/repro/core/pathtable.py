@@ -30,6 +30,7 @@ gather tables).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -122,7 +123,16 @@ class PathTable:
 
         O(n^2) python -- strictly an interop/debugging edge, never called
         on the routing -> simulation hot path.
+
+        .. deprecated:: PR 10
+           Dict views are confined to API edges; internal consumers read
+           the packed arrays directly.
         """
+        warnings.warn(
+            "PathTable.as_dicts() is an interop/debugging edge and is "
+            "deprecated for internal use; read the packed arrays "
+            "(path/hops/vcs or the CSR fields) instead.",
+            DeprecationWarning, stacklevel=2)
         paths: Dict[Tuple[int, int], Tuple[int, ...]] = {}
         vcs: Dict[Tuple[int, int], List[int]] = {}
         ss, dd = np.nonzero(self.routed_mask())
@@ -380,6 +390,12 @@ class CSRPathTable:
 
     def as_dicts(self) -> Tuple[Dict[Tuple[int, int], Tuple[int, ...]],
                                 Dict[Tuple[int, int], List[int]]]:
+        """.. deprecated:: PR 10 -- see :meth:`PathTable.as_dicts`."""
+        warnings.warn(
+            "CSRPathTable.as_dicts() is an interop/debugging edge and is "
+            "deprecated for internal use; read the CSR arrays "
+            "(hop_indptr/chan/vc/dst) instead.",
+            DeprecationWarning, stacklevel=2)
         paths: Dict[Tuple[int, int], Tuple[int, ...]] = {}
         vcs: Dict[Tuple[int, int], List[int]] = {}
         src = self.flow_src

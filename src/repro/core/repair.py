@@ -79,9 +79,10 @@ import scipy.sparse as sp
 from scipy.sparse import csgraph
 
 from repro.core.pathtable import CSRPathTable
-from repro.core.routing import (ATResult, RoutingResult, _BatchedDAG,
-                                _dead_channel_array, _refine_candidates,
-                                _walk_flows, allowed_turns, node_distances,
+from repro.core.routing import (ATResult, Channels, RoutingResult,
+                                _BatchedDAG, _dead_channel_array,
+                                _refine_candidates, _walk_flows,
+                                allowed_turns, node_distances,
                                 select_paths)
 from repro.core.topology import Topology
 from repro.core.vcalloc import allocate_vcs, reallocate_vcs, \
@@ -171,20 +172,24 @@ class ServingState:
     def build(topo: Topology, n_vc: int = 4, K: int = 8, seed: int = 0,
               robust: bool = True, priority: str = "apl",
               **select_kw) -> "ServingState":
-        """Cold build: robust allowed turns -> sharded selection (with
-        the distance-field capture hooks) -> balanced VC allocation."""
-        at = allowed_turns(topo, n_vc=n_vc, robust=robust, seed=seed,
-                           priority=priority)
-        ch = at.channels
+        """Cold build via :func:`repro.core.pipeline.route_pod`: robust
+        allowed turns -> sharded selection (with the distance-field
+        capture hooks) -> in-place balanced VC allocation."""
+        from repro.core.pipeline import PipelineConfig, route_pod
+
+        cfg = PipelineConfig(n_vc=n_vc, K=K, seed=seed, robust=robust,
+                             priority=priority, engine="sharded",
+                             local_search_rounds=3, vc="inplace")
+        ch = Channels.from_topology(topo)
         n, S = ch.n_nodes, ch.n * n_vc
         dist = np.full((n, S), -1, np.int8)
         best = np.full((n, n), -1, np.int16)
-        routed = select_paths(at, K=K, seed=seed, engine="sharded",
-                              dist_out=dist, best_out=best, **select_kw)
-        counts = allocate_vcs(at, routed.table)
+        rp = route_pod(topo, cfg, dist_out=dist, best_out=best,
+                       select_kw=select_kw)
+        at, routed = rp.at, rp.routed
         loads = np.zeros(ch.n + 1, np.int64)
         loads[:ch.n] = routed.loads.astype(np.int64)
-        return ServingState(topo, at, routed.table, loads, counts,
+        return ServingState(topo, at, routed.table, loads, rp.vc_counts,
                             np.zeros(0, np.int64), dist, best, K, seed,
                             stats=routed.stats, at0=at)
 

@@ -71,6 +71,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import defaultdict, deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -1674,8 +1675,17 @@ class RoutingResult:
     @property
     def paths(self) -> Dict[Tuple[int, int], Tuple[int, ...]]:
         """Dict view, materialised on demand (API edge only -- the
-        routing -> VC alloc -> simulation pipeline uses ``table``)."""
-        return self.table.as_dicts()[0]
+        routing -> VC alloc -> simulation pipeline uses ``table``).
+
+        .. deprecated:: PR 10 -- use ``table`` (packed arrays) instead.
+        """
+        warnings.warn(
+            "RoutingResult.paths is deprecated for internal use; read "
+            "the packed RoutingResult.table instead.",
+            DeprecationWarning, stacklevel=2)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return self.table.as_dicts()[0]
 
 
 def select_paths(at: ATResult, K: int = 8, seed: int = 0,
@@ -1687,7 +1697,9 @@ def select_paths(at: ATResult, K: int = 8, seed: int = 0,
                  refine_cap: Optional[int] = None,
                  uniq_dp="auto",
                  dist_out: Optional[np.ndarray] = None,
-                 best_out: Optional[np.ndarray] = None) -> RoutingResult:
+                 best_out: Optional[np.ndarray] = None,
+                 pair_weight: Optional[np.ndarray] = None
+                 ) -> RoutingResult:
     """Min-max channel load selection: greedy + local search (the paper
     solves an ILP with Gurobi; we report the achieved L_max against the
     lower bound so the optimality gap is visible).
@@ -1723,7 +1735,18 @@ def select_paths(at: ATResult, K: int = 8, seed: int = 0,
     fault-repair pipeline (:mod:`repro.core.repair`) stores these at
     build time so repairs can re-walk pooled flows without re-running
     the BFS.
+
+    ``pair_weight`` (array engine only) is an ``(n, n)`` matrix of
+    non-negative integer demand multiplicities: every load counter
+    treats flow ``(s, d)`` as ``pair_weight[s, d]`` unit flows, so the
+    min-max objective becomes demand-weighted channel load -- routing
+    co-designed with the workload the fabric was synthesized for. An
+    all-ones matrix is bit-identical to the unweighted path (the
+    weighted arithmetic degenerates to today's exactly).
     """
+    if pair_weight is not None and engine != "array":
+        raise ValueError("pair_weight requires engine='array' (the "
+                         "sharded/reference engines are unweighted)")
     if engine == "reference":
         return _select_paths_reference(at, K=K, seed=seed,
                                        dead_channels=dead_channels,
@@ -1744,14 +1767,16 @@ def select_paths(at: ATResult, K: int = 8, seed: int = 0,
     t_enum = time.time() - t0
     out = _select_array(at, cs, seed=seed,
                         local_search_rounds=local_search_rounds,
-                        block=block or 1024)
+                        block=block or 1024, pair_weight=pair_weight)
     out.stats["enumerate_s"] = round(t_enum, 3)
     return out
 
 
 def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
                   local_search_rounds: int = 3,
-                  block: int = 1024) -> RoutingResult:
+                  block: int = 1024,
+                  pair_weight: Optional[np.ndarray] = None
+                  ) -> RoutingResult:
     ch = at.channels
     n = ch.n_nodes
     SEN = cs.n_ch
@@ -1762,7 +1787,17 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
                              cs.unreachable, stats={})
     cand = cs.chan
     loads = np.zeros(SEN + 1, np.int64)
-    BIG = np.int64(F) * L + 1
+    if pair_weight is None:
+        w = np.ones(F, np.int64)
+    else:
+        pw = np.asarray(pair_weight)
+        if pw.shape != (n, n):
+            raise ValueError(f"pair_weight shape {pw.shape} != ({n}, {n})")
+        if (pw < 0).any():
+            raise ValueError("pair_weight must be non-negative")
+        w = np.maximum(np.rint(pw[cs.flow_src, cs.flow_dst]), 1) \
+            .astype(np.int64)
+    BIG = np.int64(w.sum()) * L + 1
     INF = np.iinfo(np.int64).max
     rng = np.random.default_rng(seed)
     order = rng.permutation(F)
@@ -1779,7 +1814,7 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
         cost[~cs.k_valid[b]] = INF
         c = cost.argmin(axis=1)
         chosen[b] = c
-        np.add.at(loads, cand[b, c].ravel(), 1)
+        np.add.at(loads, cand[b, c].ravel(), np.repeat(w[b], L))
         loads[SEN] = 0
     stats["greedy_s"] = round(time.time() - t0, 3)
     t0 = time.time()
@@ -1794,7 +1829,8 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
             bc = cand[b]                                     # (B, K, L)
             cur = bc[ar(B), chosen[b]]                       # (B, L)
             ladj = loads[bc] - (bc[:, :, :, None]
-                                == cur[:, None, None, :]).sum(axis=3)
+                                == cur[:, None, None, :]).sum(axis=3) \
+                * w[b][:, None, None]
             ladj = np.where(bc == SEN, 0, ladj)
             cost = ladj.max(axis=2) * BIG + ladj.sum(axis=2)
             cost[~cs.k_valid[b]] = INF
@@ -1802,8 +1838,10 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
             better = cost[ar(B), newc] < cost[ar(B), chosen[b]]
             if better.any():
                 mv = np.nonzero(better)[0]
-                np.add.at(loads, cur[mv].ravel(), -1)
-                np.add.at(loads, bc[mv, newc[mv]].ravel(), 1)
+                np.add.at(loads, cur[mv].ravel(),
+                          np.repeat(-w[b[mv]], cur.shape[1]))
+                np.add.at(loads, bc[mv, newc[mv]].ravel(),
+                          np.repeat(w[b[mv]], cur.shape[1]))
                 loads[SEN] = 0
                 chosen[b[mv]] = newc[mv]
                 changed += len(mv)
@@ -1832,17 +1870,23 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
         bc = cand[hf]                                        # (H, K, L)
         cur = sel[hf]
         ladj = loads[bc] - (bc[:, :, :, None]
-                            == cur[:, None, None, :]).sum(axis=3)
+                            == cur[:, None, None, :]).sum(axis=3) \
+            * w[hf][:, None, None]
         ladj = np.where(bc == SEN, 0, ladj)
-        safe = (ladj <= lm - 2).all(axis=2) & cs.k_valid[hf]
+        # landing at ladj + w must stay < lm: ladj <= lm - 1 - w
+        # (the unweighted lm - 2 rule, generalised per flow weight)
+        safe = (ladj <= lm - 1 - w[hf][:, None, None]).all(axis=2) \
+            & cs.k_valid[hf]
         cost = ladj.max(axis=2) * BIG + ladj.sum(axis=2)
         cost[~safe] = INF
         newc = cost.argmin(axis=1)
         mv = np.nonzero(safe[ar(len(hf)), newc])[0]
         if len(mv) == 0:
             break
-        np.add.at(loads, cur[mv].ravel(), -1)
-        np.add.at(loads, bc[mv, newc[mv]].ravel(), 1)
+        np.add.at(loads, cur[mv].ravel(),
+                  np.repeat(-w[hf[mv]], cur.shape[1]))
+        np.add.at(loads, bc[mv, newc[mv]].ravel(),
+                  np.repeat(w[hf[mv]], cur.shape[1]))
         loads[SEN] = 0
         chosen[hf[mv]] = newc[mv]
         lm_now = loads[:SEN].max()
@@ -1872,7 +1916,7 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
             (cand[ar(F), chosen] == hot).any(axis=1))[0]
         rng.shuffle(hot_flows)
         for f in hot_flows:
-            np.add.at(loads, cand[f, chosen[f]], -1)
+            np.add.at(loads, cand[f, chosen[f]], -int(w[f]))
             loads[SEN] = 0
             l = loads[cand[f]]
             cost = l.max(axis=1) * BIG + l.sum(axis=1)
@@ -1883,7 +1927,7 @@ def _select_array(at: ATResult, cs: CandidateSet, seed: int = 0,
             if best != chosen[f]:
                 improved = True
             chosen[f] = best
-            np.add.at(loads, cand[f, best], 1)
+            np.add.at(loads, cand[f, best], int(w[f]))
             loads[SEN] = 0
             if loads[:SEN].max() < loads[hot]:
                 break

@@ -670,32 +670,31 @@ def evaluate_end_to_end(topo: T.Topology, n_vc: int = 2, K: int = 4,
                         local_search_rounds: int = 2, seed: int = 0,
                         priority: str = "apl", saturation: bool = False,
                         sat_kwargs: Optional[dict] = None) -> dict:
-    """Route a (synthesized) topology through the production pipeline and
-    report scalars: ``Channels.from_topology`` -> ``allowed_turns`` ->
-    ``select_paths(engine="sharded")`` -> VC allocation -> deadlock-free
+    """Route a (synthesized) topology through the production pipeline
+    (:func:`repro.core.pipeline.route_pod`) and report scalars:
+    allowed turns -> path selection -> VC allocation -> deadlock-free
     verification -> (optionally) netsim saturation throughput.
     """
-    from repro.core import netsim as NS, routing as R, vcalloc as V
+    from repro.core import netsim as NS, routing as R
+    from repro.core.pipeline import PipelineConfig, route_pod
 
     out: dict = {"n": topo.n, "name": topo.name}
-    t0 = time.time()
-    at = R.allowed_turns(topo, n_vc=n_vc, priority=priority)
-    out["at_s"] = round(time.time() - t0, 3)
-    out["n_allowed_turns"] = len(at.allowed)
-    t0 = time.time()
-    routed = R.select_paths(at, K=K, seed=seed, engine=select_engine,
-                            local_search_rounds=local_search_rounds)
-    out["select_s"] = round(time.time() - t0, 3)
-    out["l_max"] = float(routed.l_max)
-    out["avg_hops"] = round(float(routed.avg_hops), 4)
-    out["unreachable"] = int(routed.unreachable)
+    cfg = PipelineConfig(n_vc=n_vc, K=K, priority=priority, seed=seed,
+                         engine=select_engine,
+                         local_search_rounds=local_search_rounds,
+                         verify=True)
+    rp = route_pod(topo, cfg)
+    out["at_s"] = round(rp.timings["at_s"], 3)
+    out["n_allowed_turns"] = len(rp.at.allowed)
+    out["select_s"] = round(rp.timings["select_s"], 3)
+    out["l_max"] = rp.l_max
+    out["avg_hops"] = round(rp.avg_hops, 4)
+    out["unreachable"] = rp.unreachable
     out["load_lower_bound"] = float(R.load_lower_bound(topo))
-    vstats: dict = {}
-    t0 = time.time()
-    tab = NS.at_tables(topo, at, routed, stats=vstats)
-    out["vcalloc_tables_s"] = round(time.time() - t0, 3)
-    out["vc_greedy_dead_ends"] = int(vstats.get("greedy_dead_ends", 0))
-    out["deadlock_free"] = bool(V.verify_deadlock_free(at, tab.table))
+    tab = rp.tables
+    out["vcalloc_tables_s"] = round(rp.timings["vc_s"], 3)
+    out["vc_greedy_dead_ends"] = int(rp.vc_stats.get("greedy_dead_ends", 0))
+    out["deadlock_free"] = bool(rp.deadlock_free)
     out["end_to_end_s"] = round(out["at_s"] + out["select_s"] +
                                 out["vcalloc_tables_s"], 3)
     if saturation:

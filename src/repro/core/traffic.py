@@ -22,6 +22,17 @@ Built-in patterns:
                       re-replication, checkpoint restore, re-sharding --
                       clusters exactly where capacity just dropped, the
                       adversarial case for fault re-routing (fig8)
+
+Beyond single stationary patterns (PR 10, workload co-design):
+
+- :func:`compose_tenants` merges several jobs' sub-pod demand matrices
+  (disjoint or overlapping node sets, per-job rate shares) into one
+  pattern carrying a :class:`TenantMap`, and the sim kernels account
+  injected/consumed/in-flight packets *per tenant*;
+- :class:`PhasedTraffic` replays a recorded collective trace as a cyclic
+  schedule of demand phases -- the spatial pattern itself switches over
+  time (MoE all-to-all -> DP all-reduce -> background), complementing
+  :class:`BurstSchedule` which only modulates intensity.
 """
 from __future__ import annotations
 
@@ -190,14 +201,24 @@ class CompiledFlowTraffic:
     O(n^2) -- the sampling-side counterpart of the CSR simulator kernel.
     ``burst`` (when set) rides along from the source pattern and makes
     the kernel modulate injection thresholds over time.
+
+    Compiled from a :class:`PhasedTraffic`, ``phases`` is P > 0 and
+    ``prob``/``alias``/``src_rate`` grow a leading phase axis --
+    (P, F)/(P, F)/(P, n) -- with ``phase_of`` mapping cycle-in-period to
+    phase index; stationary patterns keep the flat shapes with
+    ``phases == 0``. ``tenants`` (from :func:`compose_tenants`) rides
+    along for the kernels' per-tenant packet accounting.
     """
     n: int
     src_indptr: np.ndarray  # (n + 1,) int32: flow range of each source
     deg: np.ndarray         # (n,) int32: routed flow count per source
-    prob: np.ndarray        # (F,) float32: alias acceptance probability
-    alias: np.ndarray       # (F,) int32: alias flow id (global)
-    src_rate: np.ndarray    # (n,) float32: relative injection rate
+    prob: np.ndarray        # (F,) float32 -- or (P, F) when phased
+    alias: np.ndarray       # (F,) int32 alias flow id -- or (P, F)
+    src_rate: np.ndarray    # (n,) float32 -- or (P, n) when phased
     burst: Optional[BurstSchedule] = None
+    tenants: Optional[TenantMap] = None
+    phases: int = 0                          # P; 0 = stationary
+    phase_of: Optional[np.ndarray] = None    # (period,) int32 when phased
 
 
 def compile_flow_traffic(traffic, src_indptr: np.ndarray,
@@ -206,12 +227,27 @@ def compile_flow_traffic(traffic, src_indptr: np.ndarray,
     """Compile a traffic pattern onto a CSR flow space.
 
     ``traffic`` is a :class:`TrafficPattern`, a :class:`CompiledTraffic`
-    (re-targeted exactly via :meth:`CompiledTraffic.row_probs`), or
-    ``None`` for uniform. ``src_indptr``/``dst`` come straight from the
-    ``CSRPathTable``. Rows are processed in blocks of ``block`` sources
-    so the padded (block, max_deg) staging arrays stay small at 4096
-    chips.
+    (re-targeted exactly via :meth:`CompiledTraffic.row_probs`), a
+    :class:`PhasedTraffic` (each phase compiled independently and
+    stacked along a leading axis), or ``None`` for uniform.
+    ``src_indptr``/``dst`` come straight from the ``CSRPathTable``. Rows
+    are processed in blocks of ``block`` sources so the padded
+    (block, max_deg) staging arrays stay small at 4096 chips.
     """
+    if isinstance(traffic, PhasedTraffic):
+        parts = [compile_flow_traffic(p, src_indptr, dst, block=block)
+                 for p in traffic.patterns]
+        phase_of = np.repeat(
+            np.arange(len(parts), dtype=np.int32),
+            np.asarray(traffic.cycles, np.int64))
+        c0 = parts[0]
+        return CompiledFlowTraffic(
+            c0.n, c0.src_indptr, c0.deg,
+            np.stack([c.prob for c in parts]),
+            np.stack([c.alias for c in parts]),
+            np.stack([c.src_rate for c in parts]),
+            burst=traffic.burst, tenants=traffic.tenants,
+            phases=len(parts), phase_of=phase_of)
     n = len(src_indptr) - 1
     F = len(dst)
     sptr = np.asarray(src_indptr, np.int64)
@@ -225,6 +261,7 @@ def compile_flow_traffic(traffic, src_indptr: np.ndarray,
         return CompiledFlowTraffic(n, sptr.astype(np.int32), deg, prob,
                                    alias, np.ones(n, np.float32))
     burst = None
+    tenants = None
     if isinstance(traffic, CompiledTraffic):
         matrix = traffic.row_probs()
         src_rate = np.asarray(traffic.src_rate, np.float32)
@@ -232,6 +269,7 @@ def compile_flow_traffic(traffic, src_indptr: np.ndarray,
         matrix = traffic.matrix
         src_rate = np.asarray(traffic.src_rate, np.float32)
         burst = traffic.burst
+        tenants = traffic.tenants
     if matrix.shape[0] != n:
         raise ValueError(f"pattern over {matrix.shape[0]} nodes, table "
                          f"over {n}")
@@ -252,7 +290,7 @@ def compile_flow_traffic(traffic, src_indptr: np.ndarray,
         alias[f0:f1] = (sptr[s0:s1, None].astype(np.int64)
                         + a.astype(np.int64))[colm].astype(np.int32)
     return CompiledFlowTraffic(n, sptr.astype(np.int32), deg, prob, alias,
-                               src_rate, burst=burst)
+                               src_rate, burst=burst, tenants=tenants)
 
 
 @dataclasses.dataclass
@@ -266,6 +304,7 @@ class TrafficPattern:
     matrix: np.ndarray          # (n, n) float64, zero diagonal
     src_rate: Optional[np.ndarray] = None   # (n,), defaults to row-mass/mean
     burst: Optional[BurstSchedule] = None
+    tenants: Optional["TenantMap"] = None   # set by compose_tenants
 
     def __post_init__(self):
         m = np.asarray(self.matrix, np.float64).copy()
@@ -296,7 +335,8 @@ class TrafficPattern:
         return TrafficPattern(f"{self.name}+burst{period}", self.matrix,
                               src_rate=self.src_rate,
                               burst=BurstSchedule(period, duty, gain,
-                                                  phase))
+                                                  phase),
+                              tenants=self.tenants)
 
     # ---- constructors -----------------------------------------------------
 
@@ -396,3 +436,162 @@ class TrafficPattern:
     def from_matrix(name: str, matrix: np.ndarray,
                     src_rate: Optional[np.ndarray] = None) -> "TrafficPattern":
         return TrafficPattern(name, matrix, src_rate)
+
+    @staticmethod
+    def from_trace(n: int, trace: Sequence[Tuple[int, int, int]],
+                   name: str = "trace") -> "TrafficPattern":
+        """Demand from a recorded collective trace -- a sequence of
+        ``(src, dst, n_chunks)`` transfers as emitted by
+        :func:`repro.core.collectives.a2a_trace`. Chunk counts on the
+        same pair accumulate."""
+        m = np.zeros((n, n), np.float64)
+        if len(trace):
+            t = np.asarray([(s, d, c) for s, d, c in trace], np.int64)
+            np.add.at(m, (t[:, 0], t[:, 1]), t[:, 2].astype(np.float64))
+        return TrafficPattern(name, m)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant composition: several jobs sharing one fabric
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One job in a shared pod: demand over its own node subset.
+
+    ``matrix`` is (m, m) over ``nodes`` order (m = len(nodes));
+    ``rate_share`` is the job's relative injection intensity -- a
+    tenant's per-source demand mass is normalised to ``rate_share``, so
+    two tenants with shares 1.0 and 0.5 offer a 2:1 per-node load ratio
+    regardless of how their raw matrices were scaled.
+    """
+    name: str
+    nodes: np.ndarray
+    matrix: np.ndarray
+    rate_share: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantMap:
+    """Per-pair tenant attribution for a composed multi-job pattern.
+
+    ``pair_tenant[s, d]`` is the tenant id whose demand dominates the
+    (s, d) pair, -1 for pairs no tenant uses. For disjoint node sets the
+    attribution is exact (each pair belongs to at most one tenant); for
+    overlapping sets a shared pair is attributed to its dominant
+    contributor (argmax of composed weight), an approximation the
+    per-tenant counters inherit and the docstrings of
+    :func:`compose_tenants` call out.
+    """
+    names: Tuple[str, ...]
+    pair_tenant: np.ndarray     # (n, n) int32, -1 = unattributed
+    n_nodes: Tuple[int, ...]    # node-set size per tenant
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.names)
+
+
+def compose_tenants(n: int,
+                    tenants: Sequence[TenantSpec]) -> TrafficPattern:
+    """Compose per-job sub-pod demands into one fabric-wide pattern.
+
+    Each tenant's matrix is embedded at its global node ids, normalised
+    so its mean per-source mass equals ``rate_share``, and summed.
+    ``src_rate`` becomes each node's summed share (so a node serving two
+    jobs injects both jobs' load); the returned pattern carries a
+    :class:`TenantMap` that the sim kernels use for per-tenant
+    injected/consumed/in-flight accounting (exact packet conservation
+    per tenant -- every injected packet is consumed or still queued).
+    """
+    if not tenants:
+        raise ValueError("need at least one tenant")
+    names = [t.name for t in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate tenant names: {names}")
+    total = np.zeros((n, n), np.float64)
+    best = np.zeros((n, n), np.float64)
+    pair = np.full((n, n), -1, np.int32)
+    share = np.zeros(n, np.float64)
+    for t_id, t in enumerate(tenants):
+        nodes = np.asarray(t.nodes, np.int64)
+        m = len(nodes)
+        if m < 2 or len(np.unique(nodes)) != m:
+            raise ValueError(f"tenant {t.name!r}: nodes must be >= 2 "
+                             f"unique ids")
+        if nodes.min() < 0 or nodes.max() >= n:
+            raise ValueError(f"tenant {t.name!r}: node ids outside "
+                             f"[0, {n})")
+        sub = np.asarray(t.matrix, np.float64).copy()
+        if sub.shape != (m, m):
+            raise ValueError(f"tenant {t.name!r}: matrix {sub.shape} vs "
+                             f"{m} nodes")
+        np.fill_diagonal(sub, 0.0)
+        if (sub < 0).any():
+            raise ValueError(f"tenant {t.name!r}: negative demand")
+        mass = sub.sum()
+        if mass <= 0:
+            raise ValueError(f"tenant {t.name!r}: zero demand mass")
+        w = sub / mass * (float(t.rate_share) * m)
+        ix = np.ix_(nodes, nodes)
+        total[ix] += w
+        blk = best[ix]
+        pblk = pair[ix]
+        take = w > blk
+        pblk[take] = t_id
+        pair[ix] = pblk
+        best[ix] = np.maximum(blk, w)
+        share[nodes] += float(t.rate_share)
+    live = share > 0
+    src_rate = (share / share[live].mean()).astype(np.float32)
+    tmap = TenantMap(tuple(names), pair,
+                     tuple(len(np.asarray(t.nodes)) for t in tenants))
+    name = "tenants:" + "+".join(names)
+    return TrafficPattern(name, total, src_rate=src_rate, tenants=tmap)
+
+
+# ---------------------------------------------------------------------------
+# Trace-driven replay: cyclic schedule of demand phases
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PhasedTraffic:
+    """A recorded collective trace as a cyclic demand schedule.
+
+    Where :class:`BurstSchedule` modulates injection *intensity* under a
+    fixed spatial pattern, a PhasedTraffic switches the spatial demand
+    itself: phase ``p`` runs ``cycles[p]`` sim cycles with
+    ``patterns[p]``'s matrix and source rates, then the schedule wraps.
+    This replays a training step's collective sequence (e.g. MoE
+    all-to-all -> DP all-reduce ring -> background) against the fabric
+    instead of a stationary average. Compiles per phase onto the CSR
+    flow slots; the kernel indexes the phase by cycle with the same RNG
+    draw count as the stationary path, so a single-phase schedule is
+    bit-identical to its stationary pattern. ``burst`` (optional)
+    modulates intensity on top of the phase schedule; ``tenants``
+    attributes pairs for per-tenant accounting (phase-independent).
+    """
+    name: str
+    patterns: Tuple[TrafficPattern, ...]
+    cycles: Tuple[int, ...]
+    burst: Optional[BurstSchedule] = None
+    tenants: Optional[TenantMap] = None
+
+    def __post_init__(self):
+        if not self.patterns or len(self.patterns) != len(self.cycles):
+            raise ValueError("need one cycle count per phase pattern")
+        if any(int(c) < 1 for c in self.cycles):
+            raise ValueError("every phase must last >= 1 cycle")
+        if len({p.n for p in self.patterns}) != 1:
+            raise ValueError("all phase patterns must cover the same "
+                             "node count")
+
+    @property
+    def n(self) -> int:
+        return self.patterns[0].n
+
+    @property
+    def period(self) -> int:
+        return int(sum(self.cycles))

@@ -1,0 +1,223 @@
+"""Facade equivalence: `route_pod` must reproduce the raw staged chain.
+
+The PR-10 API redesign is only safe if a migrated call site is
+bit-identical to the hand-rolled `allowed_turns -> select_paths ->
+allocate_vcs / at_tables` chain it replaced -- same seed in, same
+tables out, on every engine and VC mode the internal call sites use.
+These tests pin exactly that, plus the deprecation surface
+(`RoutingResult.paths` / `PathTable.as_dicts`).
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import fault as F, netsim as NS, routing as R, \
+    topology as T
+from repro.core.pipeline import PipelineConfig, RoutedPod, route_pod
+from repro.core.vcalloc import allocate_vcs, verify_deadlock_free
+
+SPEC = (4, 4, 4)
+
+
+def _tables_equal(a, b) -> bool:
+    """Bit-identity across every ndarray/scalar field of a path table
+    (works for both the dense PathTable and the CSRPathTable)."""
+    assert type(a) is type(b)
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, np.ndarray):
+            if va.dtype != vb.dtype or not np.array_equal(va, vb):
+                return False
+        elif va != vb:
+            return False
+    return True
+
+
+@pytest.mark.parametrize("engine", ["array", "sharded"])
+def test_route_pod_matches_raw_chain(engine):
+    topo = T.pt(SPEC)
+    at = R.allowed_turns(topo, n_vc=2, priority="apl", seed=0)
+    sel = R.select_paths(at, K=4, seed=0, local_search_rounds=2,
+                         engine=engine)
+    tab = NS.at_tables(topo, at, sel)
+
+    rp = route_pod(topo, PipelineConfig(K=4, seed=0, engine=engine,
+                                        local_search_rounds=2))
+    assert isinstance(rp, RoutedPod)
+    assert rp.l_max == float(sel.l_max)
+    assert rp.avg_hops == float(sel.avg_hops)
+    assert rp.unreachable == int(sel.unreachable)
+    assert _tables_equal(rp.routed.table, sel.table)
+    assert _tables_equal(rp.tables.table, tab.table)
+    assert set(rp.timings) >= {"at_s", "select_s", "vc_s"}
+
+
+def test_route_pod_inplace_matches_allocate_vcs():
+    topo = T.pdtt(SPEC)
+    at = R.allowed_turns(topo, n_vc=2, priority="apl", seed=0)
+    sel = R.select_paths(at, K=4, seed=0, local_search_rounds=1,
+                         engine="array")
+    counts = allocate_vcs(at, sel.table, balance=True)
+    assert verify_deadlock_free(at, sel.table)
+
+    rp = route_pod(topo, PipelineConfig(K=4, seed=0, engine="array",
+                                        local_search_rounds=1,
+                                        vc="inplace", verify=True))
+    assert rp.deadlock_free is True
+    assert rp.tables is None
+    np.testing.assert_array_equal(rp.vc_counts, counts)
+    # in-place mode allocates on the routed table itself, no copy
+    assert rp.table is rp.routed.table
+    assert _tables_equal(rp.table, sel.table)
+
+
+def test_route_pod_vc_none_skips_allocation():
+    topo = T.pt(SPEC)
+    rp = route_pod(topo, PipelineConfig(K=4, local_search_rounds=1,
+                                        engine="array", vc="none"))
+    assert rp.tables is None and rp.vc_counts is None
+    assert rp.unreachable == 0 and rp.l_max > 0
+
+
+def test_route_pod_prebuilt_at_and_dead_channels():
+    """The fault-sweep shape: reuse one robust AT, re-select around a
+    dead color -- identical to calling select_paths directly."""
+    topo = T.pdtt(SPEC)
+    at = R.allowed_turns(topo, n_vc=4, priority="apl", robust=True,
+                         seed=0)
+    dead = F.dead_channels_for_color(at, F.colors_in_use(topo)[0])
+    sel = R.select_paths(at, K=4, seed=0, local_search_rounds=1,
+                         engine="array", dead_channels=dead)
+
+    rp = route_pod(topo, PipelineConfig(K=4, seed=0, engine="array",
+                                        local_search_rounds=1,
+                                        vc="none"),
+                   at=at, dead_channels=dead)
+    assert rp.at is at                    # reused, not rebuilt
+    assert "at_s" not in rp.timings
+    assert _tables_equal(rp.routed.table, sel.table)
+
+
+def test_pipeline_config_rejects_bad_vc_mode():
+    with pytest.raises(ValueError, match="vc mode"):
+        PipelineConfig(vc="bogus")
+
+
+def test_select_kw_overrides_config():
+    topo = T.pt(SPEC)
+    rp = route_pod(topo, PipelineConfig(K=4, engine="array",
+                                        local_search_rounds=2,
+                                        vc="none"),
+                   select_kw={"local_search_rounds": 0})
+    ref = route_pod(topo, PipelineConfig(K=4, engine="array",
+                                        local_search_rounds=0,
+                                        vc="none"))
+    assert _tables_equal(rp.routed.table, ref.routed.table)
+
+
+# ---------------------------------------------------------------------------
+# deprecation surface
+# ---------------------------------------------------------------------------
+
+
+def _routed(topo):
+    return route_pod(topo, PipelineConfig(K=4, engine="array",
+                                          local_search_rounds=1,
+                                          vc="none")).routed
+
+
+def test_pathtable_as_dicts_deprecated():
+    sel = _routed(T.pt(SPEC))
+    with pytest.warns(DeprecationWarning, match="as_dicts"):
+        d = sel.table.as_dicts()
+    assert len(d) > 0
+
+
+def test_routing_result_paths_deprecated_single_warning():
+    sel = _routed(T.pt(SPEC))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        p = sel.paths
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    # the property warns once; the inner as_dicts warning is suppressed
+    assert len(deps) == 1
+    assert "paths" in str(deps[0].message)
+    assert len(p) > 0
+
+
+# ---------------------------------------------------------------------------
+# demand-weighted selection (pair_weight)
+# ---------------------------------------------------------------------------
+
+
+def test_pair_weight_all_ones_is_identity():
+    """Unit multiplicities must be bit-identical to the unweighted
+    selector -- the weighted arithmetic degenerates exactly."""
+    topo = T.pt(SPEC)
+    n = topo.n
+    plain = route_pod(topo, PipelineConfig(K=4, engine="array",
+                                           local_search_rounds=2,
+                                           vc="none"))
+    ones = route_pod(topo, PipelineConfig(K=4, engine="array",
+                                          local_search_rounds=2,
+                                          vc="none"),
+                     pair_weight=np.ones((n, n)))
+    assert plain.l_max == ones.l_max
+    assert _tables_equal(plain.routed.table, ones.routed.table)
+
+
+def _weighted_bottleneck(table, w) -> float:
+    """Max per-channel load when pair (s, d) counts as w[s, d] flows."""
+    valid = table.path >= 0
+    loads = np.bincount(
+        table.path[valid],
+        weights=np.broadcast_to(w[:, :, None], table.path.shape)[valid],
+        minlength=table.n_ch)
+    return float(loads.max())
+
+
+def test_pair_weight_skew_steers_selection():
+    """A skewed demand must steer the selector: the weighted run's
+    reported l_max is its true weighted bottleneck, and it beats the
+    weighted bottleneck the demand-blind selection lands on."""
+    topo = T.pt(SPEC)
+    n = topo.n
+    rng = np.random.default_rng(7)
+    w = np.ones((n, n))
+    hot = rng.permutation(n)
+    w[np.arange(n), hot] = 8.0            # one hot partner per source
+    np.fill_diagonal(w, 1.0)
+    plain = route_pod(topo, PipelineConfig(K=4, engine="array",
+                                           local_search_rounds=2,
+                                           vc="none"))
+    weighted = route_pod(topo, PipelineConfig(K=4, engine="array",
+                                              local_search_rounds=2,
+                                              vc="none"),
+                         pair_weight=w)
+    assert weighted.routed.unreachable == 0
+    assert weighted.l_max == _weighted_bottleneck(weighted.table, w)
+    assert weighted.l_max < _weighted_bottleneck(plain.table, w)
+
+
+def test_pair_weight_requires_array_engine():
+    topo = T.pt(SPEC)
+    n = topo.n
+    with pytest.raises(ValueError, match="array"):
+        route_pod(topo, PipelineConfig(K=4, engine="sharded",
+                                       vc="none"),
+                  pair_weight=np.ones((n, n)))
+
+
+def test_pair_weight_validation():
+    topo = T.pt(SPEC)
+    n = topo.n
+    at = R.allowed_turns(topo, n_vc=2, priority="apl", seed=0)
+    with pytest.raises(ValueError, match="shape"):
+        R.select_paths(at, K=4, engine="array",
+                       pair_weight=np.ones((3, 3)))
+    bad = np.ones((n, n))
+    bad[0, 1] = -2.0
+    with pytest.raises(ValueError, match="non-negative"):
+        R.select_paths(at, K=4, engine="array", pair_weight=bad)

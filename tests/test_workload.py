@@ -1,0 +1,268 @@
+"""Workload co-design tests: demand derivation, multi-tenant traffic,
+trace replay, and the synthesis hookup.
+
+Covers the PR-10 acceptance surface:
+
+- `demand.from_dryrun` / `workload.collective_mix` on >= 2 registered
+  model configs (MoE vs dense -> genuinely different demand mixes),
+  weight symmetry and shape handling (train / decode);
+- unrouted-pair behaviour: zero-weight pairs don't break the weighted
+  MCF and the demand matrix renormalises into valid alias tables;
+- two-tenant composition through the CSR sim kernel with *exact*
+  per-tenant packet conservation, bit-identical to the dense oracle;
+- phased trace replay: a single-phase schedule is bit-identical to its
+  stationary pattern, multi-phase stays CSR==dense;
+- (huge) a workload-specialized synthesis smoke for the nightly lane.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import demand as D, netsim as NS, topology as T
+from repro.core import workload as W
+from repro.core.pipeline import PipelineConfig, route_pod
+from repro.core.traffic import (PhasedTraffic, TenantSpec, TrafficPattern,
+                                compose_tenants)
+
+MOE_ARCH = "deepseek-moe-16b"
+DENSE_ARCH = "gemma-7b"
+
+
+# ---------------------------------------------------------------------------
+# demand derivation: analytic mix + dry-run JSONs
+# ---------------------------------------------------------------------------
+
+
+def test_collective_mix_moe_vs_dense():
+    from repro.configs.registry import get_config, get_shape
+    shape = get_shape("train_4k")
+    moe = W.collective_mix(get_config(MOE_ARCH).model, shape)
+    dense = W.collective_mix(get_config(DENSE_ARCH).model, shape)
+    assert moe["all-to-all"] > 0          # MoE dispatch+combine
+    assert dense["all-to-all"] == 0.0     # no expert routing
+    for mix in (moe, dense):
+        assert mix["all-reduce"] > 0      # train: DP gradient sync
+        assert mix["all-gather"] > 0 and mix["reduce-scatter"] > 0
+
+
+def test_collective_mix_decode_drops_gradient_sync():
+    from repro.configs.base import ShapeConfig
+    from repro.configs.registry import get_config
+    decode = ShapeConfig("decode_1", seq_len=4096, global_batch=64,
+                         kind="decode")
+    mix = W.collective_mix(get_config(DENSE_ARCH).model, decode)
+    assert mix["all-reduce"] == 0.0
+    # token-proportional terms collapse to one token per sequence
+    assert 0 < mix["all-gather"] < 4096 * 64 * 1e6
+
+
+def test_workload_demand_differentiates_archs():
+    """MoE -> same-cube (all-to-all) heavy; dense -> ring heavy."""
+    wd_moe = W.workload_demand((4, 4, 8), MOE_ARCH)
+    wd_dense = W.workload_demand((4, 4, 8), DENSE_ARCH)
+    assert wd_moe.w_same_cube > wd_moe.w_ring
+    assert wd_dense.w_ring > wd_dense.w_same_cube
+    assert wd_dense.w_same_cube == 0.0
+
+
+@pytest.mark.parametrize("arch,heavy", [(MOE_ARCH, "all-to-all"),
+                                        (DENSE_ARCH, "all-reduce")])
+def test_from_dryrun_json_roundtrip(tmp_path, arch, heavy):
+    """A measured dry-run JSON feeds the same mapping as the analytic
+    mix: whichever collective dominates the wire bytes dominates the
+    demand weights."""
+    wires = {"all-to-all": 0.0, "all-reduce": 0.0,
+             "all-gather": 1e9, "reduce-scatter": 1e9}
+    wires[heavy] = 64e9
+    (tmp_path / f"{arch}__train_4k__single_pod_16x16.json").write_text(
+        json.dumps({"collectives": {
+            k: {"wire_bytes": v} for k, v in wires.items()}}))
+    wd = D.from_dryrun((4, 4, 8), arch, "train_4k",
+                       dryrun_dir=str(tmp_path))
+    if heavy == "all-to-all":
+        assert wd.w_same_cube > wd.w_ring > 0
+    else:
+        assert wd.w_ring > wd.w_same_cube
+    # workload_demand prefers the measured JSON over the analytic mix
+    wd2 = W.workload_demand((4, 4, 8), arch, dryrun_dir=str(tmp_path))
+    assert (wd2.w_same_cube, wd2.w_ring) == (wd.w_same_cube, wd.w_ring)
+
+
+def test_from_dryrun_missing_file_falls_back_uniform(tmp_path):
+    wd = D.from_dryrun((4, 4, 8), "no-such-arch", "train_4k",
+                       dryrun_dir=str(tmp_path))
+    assert wd.w_same_cube == 0.0 and wd.w_ring == 0.0
+    assert wd.w_uniform == 1.0
+
+
+def test_workload_weight_symmetry():
+    """w(a, b) == w(b, a): both same-cube membership and the +-1 cube
+    ring test are symmetric, so the synthesis LP's symmetric orbit
+    reductions stay valid."""
+    for arch in (MOE_ARCH, DENSE_ARCH):
+        m = W.workload_demand((4, 4, 8), arch).matrix()
+        np.testing.assert_allclose(m, m.T)
+
+
+def test_zero_uniform_demand_still_routes():
+    """Unrouted-pair handling: with w_uniform=0 most pairs carry zero
+    demand; the alias compilation renormalises the live rows and the
+    weighted MCF stays finite and positive."""
+    pod = T.Pod((4, 4, 8))
+    wd = D.WorkloadDemand(pod, w_same_cube=4.0, w_ring=0.0, w_uniform=0.0)
+    tp = TrafficPattern.from_demand(wd)
+    probs = tp.compiled().row_probs()
+    live = probs.sum(axis=1) > 0
+    assert live.all()                      # every source has a target
+    np.testing.assert_allclose(probs[live].sum(axis=1), 1.0, atol=1e-6)
+    # zero-weight (cross-cube) pairs draw zero probability
+    assert probs[0, -1] == 0.0
+    lam = D.weighted_mcf(T.pt((4, 4, 8)), wd)
+    assert np.isfinite(lam) and lam > 0
+
+
+def test_demand_pair_weight_quantization():
+    """The routing multiplicities are capped integers >= 1 with the
+    smallest positive demand level mapped to 1, and trace replay
+    durations follow per-node volume, not raw weight levels."""
+    wd = W.workload_demand((4, 4, 8), DENSE_ARCH)     # ring-heavy
+    pw = W.demand_pair_weight(wd, cap=64)
+    assert pw.shape == (128, 128)
+    assert pw.min() == 1.0                 # zero-demand pairs still route
+    assert pw.max() <= 64.0
+    np.testing.assert_allclose(pw, np.rint(pw))       # integers
+    m = wd.matrix()
+    assert pw[m == m[m > 0].min()].min() == 1.0
+    # uniform floor touches ~127 partners vs one ring partner: the
+    # background phase must get the larger share of the replay period
+    tr = W.replay_trace(wd)
+    by_name = dict(zip([p.name for p in tr.patterns], tr.cycles))
+    assert by_name["background"] > by_name["ring"]
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant composition through the sim kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_tables():
+    topo = T.pt((4, 4, 4))
+    return topo, route_pod(topo, PipelineConfig(
+        K=4, local_search_rounds=1, engine="sharded")).tables
+
+
+def _two_tenants(n, overlap):
+    rng = np.random.default_rng(0)
+    a_nodes = np.arange(0, n // 2)
+    b0 = n // 2 - (8 if overlap else 0)
+    b_nodes = np.arange(b0, min(n, b0 + n // 2))
+    mk = lambda m: rng.random((m, m))
+    return [TenantSpec("jobA", a_nodes, mk(len(a_nodes)), 1.0),
+            TenantSpec("jobB", b_nodes, mk(len(b_nodes)), 0.5)]
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_two_tenant_exact_conservation(small_tables, overlap):
+    topo, tab = small_tables
+    tp = compose_tenants(topo.n, _two_tenants(topo.n, overlap))
+    assert tp.tenants is not None and tp.tenants.n_tenants == 2
+    out = {}
+    for kernel in ("csr", "dense"):
+        tr = NS.sweep(tab, [0.05, 0.2], traffic=tp, cycles=800,
+                      warmup=200, kernel=kernel)
+        for r in tr:
+            tens = r["tenants"]
+            assert set(tens) == {"jobA", "jobB"}
+            tot_inj = tot_con = tot_fly = 0
+            for t in tens.values():
+                # the acceptance bar: exact per-tenant conservation
+                assert t["injected"] == t["consumed"] + t["in_flight"]
+                tot_inj += t["injected"]
+                tot_con += t["consumed"]
+                tot_fly += t["in_flight"]
+            assert tot_inj == r["injected_total"]
+            assert tot_con == r["consumed_total"]
+            assert tot_fly == r["in_flight"]
+        out[kernel] = tr
+    assert out["csr"] == out["dense"]     # tenant counters bit-identical
+
+
+def test_workload_tenant_slices_demand(small_tables):
+    topo, tab = small_tables
+    nodes_a = list(range(0, 32))
+    nodes_b = list(range(32, 64))
+    ta = W.workload_tenant("moe", topo.pod.dims, nodes_a, MOE_ARCH)
+    tb = W.workload_tenant("dense", topo.pod.dims, nodes_b, DENSE_ARCH,
+                           rate_share=0.5)
+    assert ta.matrix.shape == (32, 32)
+    tp = compose_tenants(topo.n, [ta, tb])
+    r = NS.sweep(tab, [0.1], traffic=tp, cycles=600, warmup=200)[0]
+    for t in r["tenants"].values():
+        assert t["injected"] == t["consumed"] + t["in_flight"]
+        assert t["injected"] > 0
+
+
+# ---------------------------------------------------------------------------
+# trace replay (phased demand)
+# ---------------------------------------------------------------------------
+
+
+def test_single_phase_bit_identical_to_stationary(small_tables):
+    topo, tab = small_tables
+    tp = TrafficPattern.hotspot(topo.n, frac=0.4)
+    ph = PhasedTraffic("one", (tp,), (128,))
+    for kernel in ("csr", "dense"):
+        a = NS.sweep(tab, [0.05, 0.3], traffic=tp, cycles=700,
+                     warmup=300, kernel=kernel)
+        b = NS.sweep(tab, [0.05, 0.3], traffic=ph, cycles=700,
+                     warmup=300, kernel=kernel)
+        assert a == b
+
+
+def test_multi_phase_csr_dense_parity(small_tables):
+    topo, tab = small_tables
+    wd = D.WorkloadDemand(topo.pod, w_same_cube=3.0, w_ring=1.0,
+                          w_uniform=0.25)
+    ph = W.replay_trace(wd, period=96)
+    assert isinstance(ph, PhasedTraffic) and len(ph.patterns) == 3
+    assert ph.period >= 96
+    a = NS.sweep(tab, [0.1, 0.4], traffic=ph, cycles=900, warmup=300,
+                 kernel="csr")
+    b = NS.sweep(tab, [0.1, 0.4], traffic=ph, cycles=900, warmup=300,
+                 kernel="dense")
+    assert a == b
+    for r in a:
+        assert r["injected_total"] == r["consumed_total"] + r["in_flight"]
+
+
+def test_from_trace_accumulates_pairs():
+    tp = TrafficPattern.from_trace(8, [(0, 1, 2), (0, 1, 3), (2, 5, 1)])
+    assert tp.matrix[0, 1] == 5.0 and tp.matrix[2, 5] == 1.0
+    assert tp.matrix.sum() == 6.0
+
+
+# ---------------------------------------------------------------------------
+# synthesis hookup (nightly smoke: the full workload->fabric loop)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.huge
+def test_workload_specialized_synthesis_smoke():
+    """synthesize_for_workload end to end on one cube: the specialized
+    fabric must score at least as well on its own workload's weighted
+    MCF as the demand-blind torus."""
+    res, wd = W.synthesize_for_workload((4, 4, 4), MOE_ARCH,
+                                        interval=48)
+    topo = res.topology
+    assert topo.n == 64
+    ev = W.evaluate_workload(
+        topo, wd, cfg=PipelineConfig(K=4, local_search_rounds=1),
+        sat_kwargs=dict(step=0.05, cycles=800, warmup=300))
+    assert ev["weighted_mcf"] > 0 and ev["trace_saturation"] > 0
+    pt = W.evaluate_workload(
+        T.pt((4, 4, 4)), wd,
+        cfg=PipelineConfig(K=4, local_search_rounds=1),
+        sat_kwargs=dict(step=0.05, cycles=800, warmup=300))
+    assert ev["weighted_mcf"] >= 0.9 * pt["weighted_mcf"]
